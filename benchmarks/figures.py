@@ -1,0 +1,325 @@
+"""One benchmark per paper table/figure (NetClone, SIGCOMM'23 §5).
+
+Each ``fig*`` function runs the calibrated cluster simulator and returns
+``(rows, claims)`` where rows are CSV-able dicts and claims are
+(claim-id, description, passed, detail) tuples checked against the paper's
+published findings (C1–C10 in DESIGN.md §1).
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core.simulator import Simulator, sweep_load
+from repro.core.workloads import (
+    BimodalService,
+    ExponentialService,
+    KVStoreService,
+)
+
+FAST = bool(int(os.environ.get("REPRO_BENCH_FAST", "0")))
+N_REQ = 6_000 if FAST else 30_000
+LOADS = [0.1, 0.2, 0.35, 0.5, 0.65, 0.8, 0.9]
+
+
+def _sweep(policy, service, loads=None, n_servers=6, n_workers=15, **kw):
+    return sweep_load(policy, service, loads or LOADS, n_servers=n_servers,
+                      n_workers=n_workers, n_requests=N_REQ, **kw)
+
+
+def _rows(tag, results):
+    return [{
+        "figure": tag, "policy": r.policy, "load": r.offered_load,
+        "throughput_mrps": round(r.throughput_mrps, 4),
+        "p50_us": round(r.p50_us, 1), "p99_us": round(r.p99_us, 1),
+        "cloned": r.n_cloned, "filtered": r.n_filtered,
+        "clone_drops": r.n_clone_drops,
+        "empty_q": round(r.empty_queue_fraction, 3),
+    } for r in results]
+
+
+def _avg_improvement(base, other):
+    imps = [b.p99_us / o.p99_us for b, o in zip(base, other)
+            if np.isfinite(b.p99_us) and np.isfinite(o.p99_us)]
+    return float(np.mean(imps))
+
+
+# --------------------------------------------------------------- figure 7 ---
+def fig7_synthetic():
+    """Latency/throughput for Exp(25), Bimodal, Exp(50), Exp(500)."""
+    rows, claims = [], []
+    workloads = {
+        "exp25": ExponentialService(25.0),
+        "bimodal": BimodalService(25.0, 250.0),
+        "exp50": ExponentialService(50.0),
+        "exp500": ExponentialService(500.0),
+    }
+    out = {}
+    for wname, svc in workloads.items():
+        for pol in ("baseline", "c-clone", "netclone"):
+            res = _sweep(pol, svc)
+            out[(wname, pol)] = res
+            rows += _rows(f"fig7_{wname}", res)
+    # C2: average p99 improvement vs baseline
+    imp_exp = _avg_improvement(out[("exp25", "baseline")],
+                               out[("exp25", "netclone")])
+    imp_bi = _avg_improvement(out[("bimodal", "baseline")],
+                              out[("bimodal", "netclone")])
+    claims.append(("C2a", "Exp(25) avg p99 improvement ≈1.48x (>=1.2x)",
+                   imp_exp >= 1.2, f"{imp_exp:.2f}x"))
+    claims.append(("C2b", "Bimodal avg p99 improvement ≈1.27x (>=1.1x)",
+                   imp_bi >= 1.1, f"{imp_bi:.2f}x"))
+    # C1: C-Clone throughput collapses; NetClone tracks baseline
+    thr = lambda rs: max(r.throughput_mrps for r in rs)
+    tb, tc, tn = (thr(out[("exp25", p)]) for p in
+                  ("baseline", "c-clone", "netclone"))
+    claims.append(("C1a", "C-Clone max throughput <= 0.65x baseline",
+                   tc <= 0.65 * tb, f"{tc:.2f} vs {tb:.2f} MRPS"))
+    claims.append(("C1b", "NetClone max throughput >= 0.9x baseline",
+                   tn >= 0.9 * tb, f"{tn:.2f} vs {tb:.2f} MRPS"))
+    # C3: improvement shrinks with load
+    lo = out[("exp25", "baseline")][1].p99_us / out[("exp25", "netclone")][1].p99_us
+    hi = out[("exp25", "baseline")][-2].p99_us / out[("exp25", "netclone")][-2].p99_us
+    claims.append(("C3", "improvement decreases as load grows",
+                   lo > hi, f"{lo:.2f}x @0.2 vs {hi:.2f}x @0.8"))
+    # paper obs: C-Clone beats NetClone at low load
+    cc = out[("exp25", "c-clone")][0].p99_us
+    nc = out[("exp25", "netclone")][0].p99_us
+    claims.append(("C3b", "C-Clone <= NetClone p99 at lowest load",
+                   cc <= nc * 1.1, f"{cc:.0f} vs {nc:.0f} us"))
+    return rows, claims
+
+
+# --------------------------------------------------------------- figure 8 ---
+def fig8_scalability():
+    """NetClone vs C-Clone vs LÆDGE with 5 workers (1 reserved for coord)."""
+    rows, claims = [], []
+    svc = ExponentialService(25.0)
+    out = {}
+    for pol in ("netclone", "c-clone", "laedge"):
+        res = _sweep(pol, svc, n_servers=5)
+        out[pol] = res
+        rows += _rows("fig8", res)
+    thr = {p: max(r.throughput_mrps for r in rs) for p, rs in out.items()}
+    claims.append(("C4", "throughput: LAEDGE < C-Clone < NetClone",
+                   thr["laedge"] < thr["c-clone"] < thr["netclone"],
+                   f"{thr['laedge']:.2f} < {thr['c-clone']:.2f} < "
+                   f"{thr['netclone']:.2f} MRPS"))
+    return rows, claims
+
+
+# --------------------------------------------------------------- figure 9 ---
+def fig9_num_servers():
+    rows, claims = [], []
+    svc = ExponentialService(25.0)
+    ok, detail = True, []
+    for n in (2, 4, 6):
+        for pol in ("baseline", "netclone"):
+            res = _sweep(pol, svc, n_servers=n, loads=[0.2, 0.5, 0.8])
+            rows += _rows(f"fig9_n{n}", res)
+        b = [r for r in rows if r["figure"] == f"fig9_n{n}"
+             and r["policy"] == "baseline"][1]
+        m = [r for r in rows if r["figure"] == f"fig9_n{n}"
+             and r["policy"] == "netclone"][1]
+        ok &= m["p99_us"] <= b["p99_us"]
+        detail.append(f"n={n}: {m['p99_us']:.0f} vs {b['p99_us']:.0f}")
+    claims = [("C5", "NetClone p99 <= baseline at mid load for 2/4/6 servers",
+               ok, "; ".join(detail))]
+    return rows, claims
+
+
+# -------------------------------------------------------------- figure 10 ---
+def fig10_racksched():
+    rows, claims = [], []
+    svc = BimodalService(25.0, 250.0)
+    hetero = [15, 15, 15, 8, 8, 8]
+    out = {}
+    for tag, wc in (("homo", None), ("hetero", hetero)):
+        for pol in ("netclone", "netclone+racksched", "racksched"):
+            res = _sweep(pol, svc, worker_counts=wc)
+            out[(tag, pol)] = res
+            rows += _rows(f"fig10_{tag}", res)
+    # C6: under heterogeneity at high load, +racksched <= plain netclone p99
+    a = out[("hetero", "netclone+racksched")][-2].p99_us
+    b = out[("hetero", "netclone")][-2].p99_us
+    claims.append(("C6", "hetero @0.8: NetClone+RackSched p99 <= NetClone",
+                   a <= b * 1.05, f"{a:.0f} vs {b:.0f} us"))
+    return rows, claims
+
+
+# ---------------------------------------------------------- figures 11/12 ---
+def fig11_12_kvstores():
+    rows, claims = [], []
+    # Redis GETs ≈ 10 µs server-side; Memcached slightly cheaper
+    for app, t_get in (("redis", 10.0), ("memcached", 8.5)):
+        for mix, p_scan in (("99get", 0.01), ("90get", 0.10)):
+            svc = KVStoreService(p_scan=p_scan, t_get=t_get)
+            out = {}
+            for pol in ("baseline", "c-clone", "netclone"):
+                res = _sweep(pol, svc, n_workers=8)
+                out[pol] = res
+                rows += _rows(f"fig11_{app}_{mix}", res)
+            if app == "redis" and mix == "99get":
+                imp = out["baseline"][0].p99_us / out["netclone"][0].p99_us
+                claims.append(("C7", "Redis 99%GET low-load p99 improvement "
+                                     ">=5x (paper up to 22.6x)",
+                               imp >= 5.0, f"{imp:.1f}x"))
+    return rows, claims
+
+
+# -------------------------------------------------------------- figure 13 ---
+def fig13_state_confidence():
+    rows, claims = [], []
+    svc = ExponentialService(25.0)
+    fracs = {}
+    for load in LOADS:
+        sim = Simulator("netclone", svc, n_servers=6, n_workers=15,
+                        seed=int(load * 100))
+        r = sim.run(offered_load=load, n_requests=N_REQ)
+        fracs[load] = r.empty_queue_fraction
+        rows.append({"figure": "fig13a", "policy": "netclone", "load": load,
+                     "empty_q": round(r.empty_queue_fraction, 3),
+                     "p99_us": round(r.p99_us, 1),
+                     "throughput_mrps": round(r.throughput_mrps, 4),
+                     "p50_us": round(r.p50_us, 1), "cloned": r.n_cloned,
+                     "filtered": r.n_filtered,
+                     "clone_drops": r.n_clone_drops})
+    claims.append(("C3c", "empty-queue fraction decreases with load but "
+                          "stays >0 at 0.9",
+                   fracs[0.1] > fracs[0.9] > 0.0,
+                   f"{fracs[0.1]:.2f} -> {fracs[0.9]:.2f}"))
+    # (b) 10 repetitions at 0.9 load
+    b_p99, n_p99 = [], []
+    reps = 3 if FAST else 10
+    for s in range(reps):
+        for pol, acc in (("baseline", b_p99), ("netclone", n_p99)):
+            sim = Simulator(pol, svc, n_servers=6, n_workers=15, seed=1000 + s)
+            acc.append(sim.run(offered_load=0.9, n_requests=N_REQ).p99_us)
+    rows.append({"figure": "fig13b", "policy": "baseline", "load": 0.9,
+                 "p99_us": round(float(np.mean(b_p99)), 1),
+                 "p99_std": round(float(np.std(b_p99)), 1)})
+    rows.append({"figure": "fig13b", "policy": "netclone", "load": 0.9,
+                 "p99_us": round(float(np.mean(n_p99)), 1),
+                 "p99_std": round(float(np.std(n_p99)), 1)})
+    claims.append(("C3d", "mean p99 over 10 runs at 0.9 load: netclone <= "
+                          "baseline", float(np.mean(n_p99)) <=
+                   float(np.mean(b_p99)),
+                   f"{np.mean(n_p99):.0f} vs {np.mean(b_p99):.0f} us"))
+    return rows, claims
+
+
+# -------------------------------------------------------------- figure 14 ---
+def fig14_low_variability():
+    rows, claims = [], []
+    imp = {}
+    for p in (0.01, 0.001):
+        svc = ExponentialService(25.0, jitter_p=p)
+        base = _sweep("baseline", svc)
+        nc = _sweep("netclone", svc)
+        rows += _rows(f"fig14_p{p}", base) + _rows(f"fig14_p{p}", nc)
+        imp[p] = _avg_improvement(base, nc)
+    claims.append(("C8", "gains persist at p=0.001 but smaller than p=0.01",
+                   1.0 < imp[0.001] < imp[0.01],
+                   f"{imp[0.001]:.2f}x vs {imp[0.01]:.2f}x"))
+    return rows, claims
+
+
+# -------------------------------------------------------------- figure 15 ---
+def fig15_filtering():
+    rows, claims = [], []
+    svc = ExponentialService(25.0)
+    out = {}
+    for pol in ("baseline", "netclone", "netclone-nofilter"):
+        res = _sweep(pol, svc)
+        out[pol] = res
+        rows += _rows("fig15", res)
+    # high load = 0.9; mean over 3 seeds (the effect is a saturation knee,
+    # so single-seed p99 is noisy — the paper also averages repeated runs)
+    reps = 2 if FAST else 3
+    mean9 = {}
+    for pol in ("baseline", "netclone-nofilter"):
+        p99s = [Simulator(pol, svc, n_servers=6, n_workers=15,
+                          seed=500 + s).run(0.9, N_REQ).p99_us
+                for s in range(reps)]
+        mean9[pol] = float(np.mean(p99s))
+    claims.append(("C9", "no filtering: p99 worse than baseline at high load",
+                   mean9["netclone-nofilter"] > mean9["baseline"],
+                   f"{mean9['netclone-nofilter']:.0f} vs "
+                   f"{mean9['baseline']:.0f} us @0.9 (mean of {reps})"))
+    return rows, claims
+
+
+# -------------------------------------------------------------- figure 16 ---
+def fig16_switch_failure():
+    rows, claims = [], []
+    svc = ExponentialService(25.0)
+    sim = Simulator("netclone", svc, n_servers=6, n_workers=15, seed=7)
+    n = 40_000 if FAST else 120_000
+    load = 0.6
+    from repro.core.workloads import load_to_rate
+    dur = n / load_to_rate(load, svc, 6, 15)
+    t_fail, t_rec = 0.35 * dur, 0.55 * dur   # switch dark for 20% of the run
+    sim.schedule_switch_failure(t_fail=t_fail, t_recover=t_rec)
+    r = sim.run(offered_load=load, n_requests=n, timeline_bin_us=dur / 50)
+    edges, thr = r.throughput_timeline
+    pre = thr[(edges >= 0.1 * dur) & (edges < 0.95 * t_fail)].mean()
+    down = thr[(edges >= 1.05 * t_fail) & (edges < 0.95 * t_rec)].mean()
+    post = thr[(edges >= 1.1 * t_rec) & (edges < 0.9 * dur)].mean()
+    for e, t in zip(edges, thr):
+        rows.append({"figure": "fig16", "policy": "netclone",
+                     "t_s": round(e / 1e6, 2), "throughput_mrps": round(t, 4)})
+    claims.append(("C10a", "throughput ~0 while switch is down",
+                   down < 0.1 * pre, f"{down:.2f} vs {pre:.2f} MRPS"))
+    claims.append(("C10b", "throughput recovers to >=90% after recovery "
+                           "(soft state only)",
+                   post >= 0.9 * pre, f"{post:.2f} vs {pre:.2f} MRPS"))
+    return rows, claims
+
+
+# ----------------------------------------------- beyond-paper: hedging ---
+def fig_hedge_beyond_paper():
+    """Beyond-paper: delayed hedging (Tail at Scale) vs NetClone.
+
+    Hypothesis from the theory (core/hedging.py): hedging's p99 floor is
+    ``delay + service tail`` so NetClone wins at low load; at high load
+    hedging's surgical duplicates (only for straggling requests) avoid
+    NetClone's stale-state herding."""
+    rows, claims = [], []
+    svc = ExponentialService(25.0)
+    out = {}
+    for pol, kw in (("baseline", {}), ("netclone", {}),
+                    ("hedge", {"delay_us": 75.0})):
+        res = _sweep(pol, svc, **kw)
+        out[pol] = res
+        rows += _rows("fig_hedge", res)
+    lo_nc, lo_h = out["netclone"][1].p99_us, out["hedge"][1].p99_us
+    hi_nc, hi_h = out["netclone"][-2].p99_us, out["hedge"][-2].p99_us
+    claims.append(("X1", "low load: NetClone p99 < hedge (clones race from "
+                         "t=0; hedge pays the delay)",
+                   lo_nc < lo_h, f"{lo_nc:.0f} vs {lo_h:.0f} us @0.2"))
+    claims.append(("X2", "hedge clones ~P(latency>delay) of requests "
+                         "(surgical), NetClone clones most",
+                   out["hedge"][1].n_cloned < 0.3 * out["netclone"][1].n_cloned,
+                   f"{out['hedge'][1].n_cloned} vs "
+                   f"{out['netclone'][1].n_cloned} clones"))
+    claims.append(("X3", "hedging also preserves baseline throughput",
+                   max(r.throughput_mrps for r in out["hedge"]) >=
+                   0.9 * max(r.throughput_mrps for r in out["baseline"]),
+                   ""))
+    return rows, claims
+
+
+ALL_FIGURES = {
+    "fig7": fig7_synthetic,
+    "fig8": fig8_scalability,
+    "fig9": fig9_num_servers,
+    "fig10": fig10_racksched,
+    "fig11_12": fig11_12_kvstores,
+    "fig13": fig13_state_confidence,
+    "fig14": fig14_low_variability,
+    "fig15": fig15_filtering,
+    "fig16": fig16_switch_failure,
+    "fig_hedge": fig_hedge_beyond_paper,
+}

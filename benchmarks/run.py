@@ -1,0 +1,115 @@
+"""Benchmark harness: one entry per paper table/figure + system microbenches.
+
+Prints ``name,us_per_call,derived`` CSV lines, a claims scoreboard checked
+against the paper's findings, and (when dry-run artifacts exist under
+results/dryrun) the roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run [figures...]
+    REPRO_BENCH_FAST=1  → reduced request counts (CI)
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+
+def _microbenches() -> list[str]:
+    """Per-call timings of the hot-path primitives (CPU; TPU kernels run in
+    interpret mode, so kernel numbers are semantics checks, not speed)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import switch_jax as sw
+    from repro.core.simulator import Simulator
+    from repro.core.workloads import ExponentialService
+    from repro.kernels.ops import fingerprint_filter
+
+    lines = []
+
+    def time_it(name, fn, n=20, per: int | None = None):
+        fn()  # warmup / compile
+        t0 = time.perf_counter()
+        for _ in range(n):
+            fn()
+        us = (time.perf_counter() - t0) / n * 1e6
+        derived = f"ns_per_item={us * 1000 / per:.0f}" if per else ""
+        lines.append(f"{name},{us:.1f},{derived}")
+
+    # vectorized dispatch tick (1024 requests per launch)
+    st = sw.init_switch_state(64, 2, 4096)
+    gp = sw.group_pairs_array(64)
+    grp = jnp.asarray(np.random.default_rng(0).integers(0, gp.shape[0], 1024),
+                      jnp.int32)
+    time_it("dispatch_tick_1024", lambda: jax.block_until_ready(
+        sw.dispatch_tick(st, gp, grp)[1].cloned), per=1024)
+    # fingerprint filter kernel (interpret mode on CPU)
+    tables = jnp.zeros((2, 4096), jnp.int32)
+    rid = jnp.asarray(np.arange(1, 257), jnp.int32)
+    idx = jnp.zeros(256, jnp.int32)
+    clo = jnp.ones(256, jnp.int32)
+    time_it("fingerprint_filter_256", lambda: jax.block_until_ready(
+        fingerprint_filter(tables, rid, idx, clo)[1]), n=5)
+    # DES simulator throughput
+    svc = ExponentialService(25.0)
+    t0 = time.perf_counter()
+    Simulator("netclone", svc, seed=0).run(offered_load=0.5, n_requests=5000)
+    dt = time.perf_counter() - t0
+    lines.append(f"des_per_request,{dt/5000*1e6:.1f},requests_per_s="
+                 f"{5000/dt:.0f}")
+    return lines
+
+
+def main() -> None:
+    from benchmarks.figures import ALL_FIGURES
+
+    wanted = sys.argv[1:] or list(ALL_FIGURES)
+    outdir = Path("results/bench")
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    print("== microbenches (name,us_per_call,derived) ==")
+    for line in _microbenches():
+        print(line)
+
+    all_rows, all_claims = [], []
+    for name in wanted:
+        if name not in ALL_FIGURES:
+            print(f"unknown figure {name}; have {list(ALL_FIGURES)}")
+            continue
+        t0 = time.time()
+        rows, claims = ALL_FIGURES[name]()
+        all_rows += rows
+        all_claims += claims
+        print(f"\n== {name} ({time.time()-t0:.1f}s) ==")
+        if rows:
+            keys = list(rows[0].keys())
+            print(",".join(keys))
+            for r in rows:
+                print(",".join(str(r.get(k, "")) for k in keys))
+
+    print("\n== paper-claims scoreboard ==")
+    n_pass = 0
+    for cid, desc, ok, detail in all_claims:
+        n_pass += ok
+        print(f"[{'PASS' if ok else 'FAIL'}] {cid}: {desc} — {detail}")
+    print(f"{n_pass}/{len(all_claims)} claims validated")
+
+    (outdir / "rows.json").write_text(json.dumps(all_rows, indent=1))
+    (outdir / "claims.json").write_text(json.dumps(
+        [{"id": c, "desc": d, "pass": bool(p), "detail": x}
+         for c, d, p, x in all_claims], indent=1))
+
+    # roofline table, if the dry-run has produced artifacts
+    if list(Path("results/dryrun").glob("*__sp.json")):
+        from repro.analysis import roofline
+        rows = roofline.table()
+        if rows:
+            print("\n== roofline (single-pod 16x16, v5e) ==")
+            print(roofline.format_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Reproduce the paper's evaluation section end to end.
+
+Thin driver over the per-figure benchmarks; writes CSV rows + the claims
+scoreboard.  Equivalent to ``python -m benchmarks.run`` but selectable:
+
+    PYTHONPATH=src python examples/paper_experiments.py fig7 fig15
+    PYTHONPATH=src REPRO_BENCH_FAST=1 python examples/paper_experiments.py
+"""
+
+import sys
+
+sys.path.insert(0, ".")  # benchmarks/ lives at the repo root
+
+from benchmarks.run import main  # noqa: E402
+
+if __name__ == "__main__":
+    main()

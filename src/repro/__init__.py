@@ -1,0 +1,3 @@
+"""NetClone (SIGCOMM'23) reproduction + multi-pod JAX framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,220 @@
+"""Roofline assembly from dry-run artifacts (TPU v5e target).
+
+Per (arch × shape) cell, derives the three roofline terms in seconds:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / (links × link_bw)
+
+HLO FLOPs/bytes come from ``compiled.cost_analysis()`` — which counts a
+``while`` (scan-over-layers) body once, so totals are reconstructed exactly
+from the two unrolled depth probes:
+
+    per_layer = probe2 − probe1              (1 vs 2 unrolled periods)
+    total     = probe1 + per_layer × (n_periods − 1) ... per quantity
+
+plus an analytic correction for the loss scan (``lm.ce_analytic_cost`` —
+the CE matmul FLOPs/bytes are exactly known).  Collective bytes are parsed
+from optimized HLO per probe and extrapolated the same way.
+
+Hardware constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI with 3 usable link-pairs per axis direction on a 2D torus — we charge the
+conservative single-link figure and report bytes so other assumptions are
+one multiplication away.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config, supported_shapes
+from repro.models import family_of
+from repro.models.common import ModelConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+N_CHIPS = 256                # single-pod roofline mesh
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    model_flops: float       # 6·N·D (dense) / 6·N_active·D (MoE); fwd-only ÷3
+    hlo_total_flops: float   # across chips
+    useful_ratio: float      # MODEL_FLOPS / HLO_FLOPS
+    bottleneck: str
+    step_time_s: float       # max of the three terms (no-overlap bound)
+    mfu: float               # model flops / (chips · peak · step_time)
+    memory_gb: float         # per-device HBM footprint (args + temps)
+    fits: bool
+    notes: str = ""
+
+
+def n_params_active(cfg: ModelConfig) -> tuple[float, float]:
+    """(total params, active-per-token params) — analytic, embedding-less
+    for the FLOPs estimate (embeddings are lookups, the unembed matmul is
+    charged separately by ce/logits)."""
+    fam = family_of(cfg)
+    import jax
+
+    shapes = jax.eval_shape(lambda k: fam.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    total = active = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        names = [getattr(k, "key", getattr(k, "name", getattr(k, "idx", "")))
+                 for k in path]
+        n = 1.0
+        for d in leaf.shape:
+            n *= d
+        path_s = "/".join(str(x) for x in names)
+        total += n
+        if "embed" in path_s or "_pos" in path_s:
+            continue   # lookups, not matmul work (unembed charged via CE)
+        if "moe/" in path_s and "shared" not in path_s and "router" not in path_s:
+            m = cfg.moe
+            active += n * (m.top_k / m.n_experts)
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """6·N_active·D for train, 2·N_active·D for forward-only shapes, plus the
+    vocab projection; decode counts one token per sequence."""
+    shape = SHAPES[shape_name]
+    _, active = n_params_active(cfg)
+    tokens = shape.tokens_per_step
+    mult = 6.0 if shape.kind == "train" else 2.0
+    vocab_proj = 2.0 * tokens * cfg.d_model * cfg.vocab_size
+    if shape.kind == "train":
+        vocab_proj *= 3.0
+    return mult * active * tokens + vocab_proj
+
+
+def _extrapolate(rec: dict, key_path: tuple[str, ...]) -> float:
+    """fixed + per_layer × n_periods from the two unrolled probes."""
+    def get(block):
+        cur = rec[block]
+        for k in key_path:
+            cur = cur.get(k, 0.0) if isinstance(cur, dict) else 0.0
+        return float(cur or 0.0)
+
+    p1, p2 = get("probe1"), get("probe2")
+    per_period = max(p2 - p1, 0.0)
+    fixed = max(p1 - per_period, 0.0)
+    return fixed + per_period * rec.get("n_periods", 1)
+
+
+def cell_roofline(rec: dict) -> Roofline | None:
+    if not rec.get("ok") or rec.get("skipped"):
+        return None
+    arch, shape_name = rec["arch"], rec["shape"]
+    cfg = get_config(arch, max_seq_len=SHAPES[shape_name].seq_len)
+    shape = SHAPES[shape_name]
+
+    has_probes = "probe1" in rec and "probe2" in rec
+    if has_probes:
+        flops = _extrapolate(rec, ("cost", "flops"))
+        bytes_ = _extrapolate(rec, ("cost", "bytes"))
+        coll = sum(
+            _extrapolate(rec, ("collectives", k))
+            for k in ("all-gather", "all-reduce", "reduce-scatter",
+                      "all-to-all", "collective-permute"))
+    else:
+        flops = rec["full"]["cost"]["flops"]
+        bytes_ = rec["full"]["cost"]["bytes"]
+        coll = sum(rec["full"]["collectives"].values())
+
+    # analytic correction: the CE loss scan body is counted once by XLA
+    if shape.kind == "train":
+        from repro.models.lm import ce_analytic_cost
+        ce = ce_analytic_cost(cfg, shape.tokens_per_step, train=True)
+        # probes already contain one scan-body count; add the missing reps
+        n_chunks = max(shape.seq_len // 512, 1)
+        flops += ce["flops"] / N_CHIPS * (n_chunks - 1) / n_chunks
+        bytes_ += ce["bytes"] / N_CHIPS * (n_chunks - 1) / n_chunks
+
+    mf = model_flops(cfg, shape_name)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_ / HBM_BW
+    collective_s = coll / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step = max(terms.values())
+    mem = rec["full"]["memory"]
+    mem_gb = (mem["argument_bytes"] + mem["temp_bytes"]) / 1e9
+    return Roofline(
+        arch=arch,
+        shape=shape_name,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        flops_per_dev=flops,
+        bytes_per_dev=bytes_,
+        coll_bytes_per_dev=coll,
+        model_flops=mf,
+        hlo_total_flops=flops * N_CHIPS,
+        useful_ratio=mf / (flops * N_CHIPS) if flops else 0.0,
+        bottleneck=bottleneck,
+        step_time_s=step,
+        mfu=mf / (N_CHIPS * PEAK_FLOPS * step) if step else 0.0,
+        memory_gb=mem_gb,
+        fits=mem_gb <= 16.0,
+    )
+
+
+def load_results(directory: str | Path = "results/dryrun",
+                 mesh_tag: str = "sp") -> list[dict]:
+    out = []
+    for p in sorted(Path(directory).glob(f"*__{mesh_tag}.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def table(directory: str | Path = "results/dryrun") -> list[Roofline]:
+    rows = []
+    for rec in load_results(directory):
+        r = cell_roofline(rec)
+        if r is not None:
+            rows.append(r)
+    return rows
+
+
+def format_table(rows: list[Roofline]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'comp_ms':>8s} {'mem_ms':>8s} "
+           f"{'coll_ms':>8s} {'bound':>7s} {'MFU':>6s} {'useful':>7s} "
+           f"{'HBM_GB':>7s} fits")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r.arch, r.shape)):
+        lines.append(
+            f"{r.arch:22s} {r.shape:12s} {r.compute_s*1e3:8.2f} "
+            f"{r.memory_s*1e3:8.2f} {r.collective_s*1e3:8.2f} "
+            f"{r.bottleneck:>7s} {r.mfu*100:5.1f}% {r.useful_ratio:7.2f} "
+            f"{r.memory_gb:7.1f} {'y' if r.fits else 'N'}")
+    return "\n".join(lines)
+
+
+def skipped_cells(directory: str | Path = "results/dryrun") -> list[tuple]:
+    out = []
+    for rec in load_results(directory):
+        if rec.get("skipped"):
+            out.append((rec["arch"], rec["shape"], rec.get("reason", "")))
+    return out
+
+
+if __name__ == "__main__":
+    rows = table()
+    print(format_table(rows))
+    for arch, shape, reason in skipped_cells():
+        print(f"SKIP {arch} × {shape}: {reason}")

@@ -1,0 +1,5 @@
+"""Checkpointing: sharded save/restore, async writer, elastic reshard."""
+
+from repro.checkpoint.store import AsyncCheckpointer, latest_step, restore, save
+
+__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]

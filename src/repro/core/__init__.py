@@ -1,0 +1,44 @@
+"""repro.core — NetClone: dynamic in-network request cloning (SIGCOMM'23).
+
+The paper's contribution, implemented twice:
+
+* exact packet-level form (``tables``, ``switch``, ``policies``) driven by the
+  discrete-event cluster simulator (``simulator``) that reproduces the paper's
+  testbed experiments, and
+* a vectorized JAX form (``switch_jax``) used by the serving dispatcher, where
+  one fused dispatch tick makes cloning decisions for a whole batch of
+  requests (the TPU-native analogue of the Tofino pipeline).
+"""
+
+from repro.core.header import (
+    CLO_CLONE,
+    CLO_NONE,
+    CLO_ORIG,
+    Request,
+    Response,
+)
+from repro.core.tables import FilterTables, GroupTable, StateTable, fingerprint_hash
+from repro.core.switch import NetCloneSwitch
+from repro.core.workloads import (
+    BimodalService,
+    ExponentialService,
+    KVStoreService,
+    ServiceProcess,
+)
+
+__all__ = [
+    "CLO_NONE",
+    "CLO_ORIG",
+    "CLO_CLONE",
+    "Request",
+    "Response",
+    "GroupTable",
+    "StateTable",
+    "FilterTables",
+    "fingerprint_hash",
+    "NetCloneSwitch",
+    "ServiceProcess",
+    "ExponentialService",
+    "BimodalService",
+    "KVStoreService",
+]

@@ -1,0 +1,5 @@
+"""Data pipeline: seeded synthetic LM streams with host sharding + prefetch."""
+
+from repro.data.pipeline import DataConfig, PrefetchingLoader, SyntheticLM
+
+__all__ = ["DataConfig", "SyntheticLM", "PrefetchingLoader"]

@@ -1,0 +1,13 @@
+"""Fault tolerance: failure detection, elastic remesh, straggler policy,
+fleet supervisor."""
+
+from repro.ft.manager import (
+    ElasticPlan,
+    FailureDetector,
+    StragglerPolicy,
+    plan_remesh,
+)
+from repro.ft.supervisor import FleetSupervisor, SupervisorHooks, SupervisorLog
+
+__all__ = ["FailureDetector", "ElasticPlan", "plan_remesh", "StragglerPolicy",
+           "FleetSupervisor", "SupervisorHooks", "SupervisorLog"]

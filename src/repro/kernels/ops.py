@@ -1,0 +1,67 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``impl`` selection: the kernels target TPU; on this CPU container they run in
+``interpret=True`` mode (Python-evaluated kernel bodies — bit-exact semantics,
+not speed).  Model code calls through these wrappers with ``impl="auto"``,
+which picks the real kernel on TPU backends and the pure-XLA reference
+otherwise, so the 512-device dry-run lowers plain XLA HLO while the kernels
+stay the TPU hot-spot implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.fingerprint_filter import fingerprint_filter as _fingerprint_filter
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.lru_scan import lru_scan as _lru_scan
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal=True, window=None, sm_scale=None,
+              impl: str = "auto", block_q: int = 256, block_k: int = 256):
+    """Multi-head attention; q (B,H,S,D), k/v (B,Hkv,S,D)."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "xla":
+        return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                                  sm_scale=sm_scale)
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            sm_scale=sm_scale, block_q=block_q,
+                            block_k=block_k, interpret=not _on_tpu())
+
+
+def fingerprint_filter(tables, req_id, idx, clo, *, impl: str = "auto",
+                       block: int = 256):
+    """NetClone response filter tick; returns (new_tables, drop_mask)."""
+    if impl == "auto":
+        impl = "pallas"  # the data-structure kernel runs fine interpreted
+    return _fingerprint_filter(tables, req_id, idx, clo, block=block,
+                               interpret=not _on_tpu())
+
+
+def ssd_scan(x, a, b_mat, c_mat, h0=None, *, impl: str = "auto",
+             chunk: int = 128):
+    """mamba2 SSD scan; returns (y, final_state)."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "xla":
+        return _ref.ssd_scan_ref(x, a, b_mat, c_mat, h0)
+    return _ssd_scan(x, a, b_mat, c_mat, h0, chunk=chunk,
+                     interpret=not _on_tpu())
+
+
+def lru_scan(x, a, h0=None, *, impl: str = "auto", chunk: int = 256,
+             block_d: int = 128):
+    """RG-LRU diagonal recurrence; returns (y, final_state)."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "xla":
+        return _ref.lru_scan_ref(x, a, h0)
+    return _lru_scan(x, a, h0, chunk=chunk, block_d=block_d,
+                     interpret=not _on_tpu())

@@ -1,0 +1,218 @@
+"""Pure-jnp oracles for every kernel in ``repro.kernels``.
+
+These are the semantic ground truth: slow, obvious, and used by both the
+kernel allclose tests and (for attention / scans) the XLA model path that the
+multi-pod dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ------------------------------------------------------------- attention ----
+#: above this KV length the XLA path processes queries in chunks so the
+#: (Sq × Skv) score matrix is never fully materialised (flash-style memory;
+#: the chunks are a python loop, so XLA cost analysis still sees every FLOP)
+ATTN_CHUNK_THRESHOLD = 8192
+ATTN_Q_CHUNK = 2048
+
+
+def _attention_block(q, k, v, sm_scale, causal, window, row_offset, skv):
+    """One query block against the full K/V with masking.
+
+    Inputs stay in their storage dtype (bf16 on the wire/HBM); the MXU
+    accumulates in f32 via ``preferred_element_type`` — pre-casting to f32
+    would force f32 copies of Q/K/V through every reshard collective.
+    """
+    sq = q.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * sm_scale
+    rows = row_offset + jnp.arange(sq)[:, None]
+    cols = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols >= rows - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)          # f32 softmax
+    p = p.astype(q.dtype)                   # bf16 P·V with f32 accumulation
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v,
+                      preferred_element_type=jnp.float32)
+
+
+def attention_ref(
+    q: jax.Array,          # (B, H, Sq, D)
+    k: jax.Array,          # (B, Hkv, Skv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    if hkv != h:
+        k = jnp.repeat(k, h // hkv, axis=1)
+        v = jnp.repeat(v, h // hkv, axis=1)
+    offset = skv - sq  # align ends (decode case)
+    if skv <= ATTN_CHUNK_THRESHOLD or sq % ATTN_Q_CHUNK:
+        out = _attention_block(q, k, v, sm_scale, causal, window, offset, skv)
+        return out.astype(q.dtype)
+    # long-context: query-chunked (each chunk rematerialised in backward)
+    chunks = []
+    blk = jax.checkpoint(
+        lambda qc, off: _attention_block(qc, k, v, sm_scale, causal, window,
+                                         off, skv))
+    for start in range(0, sq, ATTN_Q_CHUNK):
+        qc = q[:, :, start : start + ATTN_Q_CHUNK, :]
+        chunks.append(blk(qc, offset + start))
+    return jnp.concatenate(chunks, axis=2).astype(q.dtype)
+
+
+# ----------------------------------------------- fingerprint filter oracle --
+def fingerprint_filter_ref(tables: np.ndarray, req_id, idx, clo):
+    """Numpy sequential oracle (same semantics as the switch register array)."""
+    tables = np.array(tables, copy=True)
+    n_slots = tables.shape[1]
+    drop = np.zeros(len(req_id), dtype=bool)
+    for i in range(len(req_id)):
+        if clo[i] <= 0:
+            continue
+        x = (np.uint64(np.uint32(req_id[i])) * np.uint64(2654435761)) & np.uint64(0xFFFFFFFF)
+        slot = int((x >> np.uint64(15)) % np.uint64(n_slots))
+        if tables[idx[i], slot] == req_id[i]:
+            tables[idx[i], slot] = 0
+            drop[i] = True
+        else:
+            tables[idx[i], slot] = req_id[i]
+    return tables, drop
+
+
+# ------------------------------------------------------------- SSD scan -----
+def ssd_scan_naive(x, a, b_mat, c_mat, h0=None):
+    """Step-by-step reference recurrence (ground truth for tests):
+
+        H_t = a_t · H_{t-1} + x_t ⊗ b_t        (H_t ∈ R^{P×N}, per head)
+        y_t = H_t · c_t
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        xt, at, bt, ct = inp
+        carry = carry * at[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xt.astype(jnp.float32), bt.astype(jnp.float32))
+        yt = jnp.einsum("bhpn,bhn->bhp", carry, ct.astype(jnp.float32))
+        return carry, yt
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(a, 1, 0),
+          jnp.moveaxis(b_mat, 1, 0), jnp.moveaxis(c_mat, 1, 0))
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), hT
+
+
+def ssd_scan_ref(x, a, b_mat, c_mat, h0=None, chunk: int = 128):
+    """Chunked-parallel SSD (the XLA model path).
+
+    All chunks are processed with *batched matmuls in parallel*; the only
+    sequential piece is a log-depth ``associative_scan`` over chunk carries.
+    No ``while`` loops — XLA cost analysis counts every FLOP, the MXU gets
+    128-aligned GEMMs, and sharding (B over data, H over model) propagates
+    cleanly.  Mathematically identical to ``ssd_scan_naive``.
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError("seq not divisible by chunk")
+    nc = s // chunk
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    f32 = jnp.float32
+    xc = x.reshape(bsz, nc, chunk, h, p).astype(f32)
+    ac = a.reshape(bsz, nc, chunk, h).astype(f32)
+    bc = b_mat.reshape(bsz, nc, chunk, h, n).astype(f32)
+    cc = c_mat.reshape(bsz, nc, chunk, h, n).astype(f32)
+
+    log_a = jnp.log(jnp.maximum(ac, 1e-37))
+    cum = jnp.cumsum(log_a, axis=2)                     # (B,NC,L,H) ≤ 0
+    # intra-chunk decay-masked attention matrix
+    sc = jnp.einsum("bclhn,bcmhn->bchlm", cc, bc)       # (B,NC,H,L,L)
+    dt_ts = cum.transpose(0, 1, 3, 2)[..., :, None] - \
+        cum.transpose(0, 1, 3, 2)[..., None, :]         # cum_t − cum_s
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # double-where: exp() must never see the (positive, overflowing) upper
+    # triangle or its cotangent turns inf·0 → NaN in the backward pass
+    dt_safe = jnp.where(mask, dt_ts, 0.0)
+    m = jnp.where(mask, jnp.exp(dt_safe), 0.0)
+    y = jnp.einsum("bchlm,bcmhp->bclhp", sc * m, xc)    # intra-chunk
+
+    # per-chunk outgoing state (pre-carry) and total decay
+    a_tot = jnp.exp(cum[:, :, -1, :])                   # (B,NC,H)
+    w = jnp.exp(cum[:, :, -1:, :] - cum)                # (B,NC,L,H) ≤ 1
+    s_c = jnp.einsum("bclhp,bclhn->bchpn", xc * w[..., None], bc)
+
+    # carry across chunks: H_c = a_tot_c · H_{c-1} + S_c  (associative)
+    a_seq = jnp.concatenate(
+        [jnp.ones((bsz, 1, h), f32), a_tot], axis=1)    # (B,NC+1,H)
+    s_seq = jnp.concatenate([h0[:, None].astype(f32),
+                             s_c.transpose(0, 1, 2, 3, 4)], axis=1)
+
+    def combine(lhs, rhs):
+        al, sl = lhs
+        ar, sr = rhs
+        return al * ar, sl * ar[..., None, None] + sr
+
+    _, h_sc = jax.lax.associative_scan(combine, (a_seq, s_seq), axis=1)
+    h_prev = h_sc[:, :-1]                               # state entering chunk c
+    hT = h_sc[:, -1]
+
+    # inter-chunk contribution
+    y = y + jnp.einsum("bclhn,bchpn->bclhp", cc * jnp.exp(cum)[..., None],
+                       h_prev)
+    return y.reshape(bsz, s, h, p).astype(x.dtype), hT
+
+
+# ------------------------------------------------------------- LRU scan -----
+def lru_scan_naive(x, a, h0=None):
+    """Step-by-step diagonal recurrence (ground truth for tests)."""
+    bsz, s, d = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d), jnp.float32)
+
+    def step(carry, inp):
+        xt, at = inp
+        carry = carry * at.astype(jnp.float32) + xt.astype(jnp.float32)
+        return carry, carry
+
+    hT, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                          (jnp.moveaxis(x, 1, 0), jnp.moveaxis(a, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype), hT
+
+
+def lru_scan_ref(x, a, h0=None):
+    """Diagonal linear recurrence via log-depth ``associative_scan`` —
+    h_t = a_t ⊙ h_{t-1} + x_t with no sequential loop in the HLO."""
+    bsz, s, d = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d), jnp.float32)
+    af = a.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    a_seq = jnp.concatenate([jnp.ones((bsz, 1, d), jnp.float32), af], axis=1)
+    x_seq = jnp.concatenate([h0[:, None], xf], axis=1)
+
+    def combine(lhs, rhs):
+        al, hl = lhs
+        ar, hr = rhs
+        return al * ar, hl * ar + hr
+
+    _, hs = jax.lax.associative_scan(combine, (a_seq, x_seq), axis=1)
+    return hs[:, 1:].astype(x.dtype), hs[:, -1]

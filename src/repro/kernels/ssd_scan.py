@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: chunked SSD (state-space duality) scan — mamba2 core.
+
+Recurrence (per head):  H_t = a_t·H_{t-1} + x_t ⊗ b_t,   y_t = H_t·c_t
+with H_t ∈ R^{P×N} (headdim × state).
+
+GPU mamba2 uses a warp-specialised chunked scan; the TPU-native re-thinking
+maps every term onto MXU matmuls (this is the *hardware adaptation* the brief
+asks for — no warp shuffles, just 128-aligned GEMMs):
+
+for each length-L chunk, with log-decay prefix ``cum_t = Σ_{s≤t} log a_s``:
+
+* intra-chunk:  ``Y  += ((C Bᵀ) ⊙ M) X``      where ``M_{t,s} = e^{cum_t−cum_s}·[s≤t]``
+* inter-chunk:  ``Y  += (C H_prevᵀ) ⊙ e^{cum}``
+* state carry:  ``H   = e^{cum_L}·H_prev + (X ⊙ e^{cum_L−cum})ᵀ B``
+
+All exponents are ≤ 0 (a ∈ (0,1]), so everything is overflow-safe.  The grid
+is ``(batch, heads, n_chunks)`` with chunks minor; the carried state lives in
+a VMEM scratch (P×N f32) across chunk steps and is emitted on the last chunk
+for decode hand-off.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hT_ref, h_scr, *,
+                n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)    # (L, P)
+    a = a_ref[0, :, 0].astype(jnp.float32)       # (L,)
+    bm = b_ref[0, :, 0, :].astype(jnp.float32)   # (L, N)
+    cm = c_ref[0, :, 0, :].astype(jnp.float32)   # (L, N)
+
+    log_a = jnp.log(jnp.maximum(a, 1e-37))
+    cum = jnp.cumsum(log_a)                      # (L,) ≤ 0, decreasing
+
+    # intra-chunk: decay-masked (C Bᵀ) "attention" matrix
+    s = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, L)
+    dt_ts = cum[:, None] - cum[None, :]          # cum_t − cum_s
+    rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    m = jnp.where(cols <= rows, jnp.exp(dt_ts), 0.0)
+    y = jax.lax.dot(s * m, x, preferred_element_type=jnp.float32)  # (L, P)
+
+    # inter-chunk: contribution of the carried state
+    h_prev = h_scr[...]                          # (P, N)
+    y += jax.lax.dot_general(cm, h_prev, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32) * jnp.exp(cum)[:, None]
+
+    # state carry to the next chunk
+    w = jnp.exp(cum[-1] - cum)                   # (L,) ≤ 1
+    h_new = jnp.exp(cum[-1]) * h_prev + jax.lax.dot_general(
+        x * w[:, None], bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (P, N)
+    h_scr[...] = h_new
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == n_chunks - 1)
+    def _emit_state():
+        hT_ref[0, 0] = h_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,       # (B, S, H, P)
+    a: jax.Array,       # (B, S, H) decay ∈ (0, 1]
+    b_mat: jax.Array,   # (B, S, H, N)
+    c_mat: jax.Array,   # (B, S, H, N)
+    h0: jax.Array | None = None,  # (B, H, P, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError("seq_len must be divisible by chunk")
+    nc = s // chunk
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    y, hT = pl.pallas_call(
+        functools.partial(_ssd_kernel, n_chunks=nc),
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b, ih, c: (b, c, ih, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, ih, c: (b, c, ih)),
+            pl.BlockSpec((1, chunk, 1, n), lambda b, ih, c: (b, c, ih, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda b, ih, c: (b, c, ih, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b, ih, c: (b, ih, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b, ih, c: (b, c, ih, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b, ih, c: (b, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, a, b_mat, c_mat, h0)
+    return y, hT

@@ -1,0 +1,189 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: for the 16×16 single-pod mesh AND the 2×16×16 multi-pod mesh, every
+cell's step function must ``.lower().compile()`` under SPMD with the
+production shardings, fit per-device HBM (``memory_analysis``), and yield the
+FLOP/byte/collective numbers the roofline reads.
+
+Because XLA's HLO cost analysis counts a ``while`` (scan-over-layers) body
+exactly once, each cell is also compiled at one- and two-period *unrolled*
+depth; the roofline extrapolates ``total = fixed + per_layer × n_periods``
+from those two probes (exact — the width is untouched).
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+    python -m repro.launch.dryrun --all [--multipod] [--out results/dryrun]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config, supported_shapes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.models.lm import scan_groups
+
+_COLL_RE = re.compile(
+    r"(\w+)\[([\d,]*)\][^ ]* (all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s8": 1, "u8": 1, "pred": 1, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum result bytes of every collective op in (optimized) HLO text."""
+    out: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dt, dims, kind = m.groups()
+        size = _DTYPE_BYTES.get(dt, 4)
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        out[kind] = out.get(kind, 0.0) + size
+    return out
+
+
+def probe_depths(cfg) -> tuple[int, int]:
+    """n_layers for the 1- and 2-period unrolled probes (prologue/epilogue
+    preserved so fixed costs match the full model)."""
+    g = scan_groups(cfg)
+    period = max(len(g.period), 1)
+    n_pro, n_epi = len(g.prologue), len(g.epilogue)
+    return n_pro + period + n_epi, n_pro + 2 * period + n_epi
+
+
+def analyse(cfg, shape, mesh, serve_sharding: str = "fsdp") -> dict:
+    bundle = build_cell(cfg, shape, mesh, serve_sharding=serve_sharding)
+    t0 = time.time()
+    lowered = bundle.lowered()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    return {
+        "compile_s": round(compile_s, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+        },
+        "cost": {"flops": ca.get("flops", 0.0),
+                 "bytes": ca.get("bytes accessed", 0.0)},
+        "collectives": collective_bytes(text),
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             with_probes: bool = True, overrides: dict | None = None,
+             serve_sharding: str = "fsdp") -> dict:
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "ok": False,
+           "overrides": overrides or {}, "serve_sharding": serve_sharding}
+    if shape_name not in supported_shapes(arch):
+        rec.update(ok=True, skipped=True,
+                   reason="full attention — long-context shape skipped")
+        return rec
+    try:
+        cfg = get_config(arch, max_seq_len=shape.seq_len,
+                         **(overrides or {}))
+        rec["full"] = analyse(cfg, shape, mesh, serve_sharding)
+        if with_probes:
+            d1, d2 = probe_depths(cfg)
+            g = scan_groups(cfg)
+            rec["n_periods"] = g.n_periods
+            rec["period_len"] = max(len(g.period), 1)
+            for name, depth in (("probe1", d1), ("probe2", d2)):
+                pcfg = cfg.replace(n_layers=depth, scan_layers=False)
+                rec[name] = analyse(pcfg, shape, mesh, serve_sharding)
+                rec[name]["n_layers"] = depth
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — recorded, not swallowed
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--variant", default=None,
+                    help="suffix for the output file (perf iterations)")
+    ap.add_argument("--serve-tp", action="store_true",
+                    help="TP-only parameter sharding for serve cells")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (bool/int/float/str)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v in ("true", "True"):
+            v = True
+        elif v in ("false", "False"):
+            v = False
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        overrides[k] = v
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape (or --all) required")
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape in cells:
+        tag = "mp" if args.multipod else "sp"
+        if args.variant:
+            tag = f"{tag}__{args.variant}"
+        path = outdir / f"{arch}__{shape}__{tag}.json"
+        if path.exists():
+            print(f"[skip] {path} exists")
+            continue
+        t0 = time.time()
+        rec = run_cell(arch, shape, args.multipod,
+                       with_probes=not args.no_probes, overrides=overrides,
+                       serve_sharding="tp" if args.serve_tp else "fsdp")
+        path.write_text(json.dumps(rec, indent=1))
+        status = "OK" if rec["ok"] else f"FAIL ({rec.get('error')})"
+        print(f"[{time.time()-t0:6.1f}s] {arch} × {shape} ({tag}): {status}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

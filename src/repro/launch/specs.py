@@ -1,0 +1,60 @@
+"""ShapeDtypeStruct stand-ins for every model input — no device allocation.
+
+``input_specs(cfg, shape)`` returns the exact pytree the corresponding step
+function consumes:
+
+* train   → {"tokens": (GB, S) i32, "labels": (GB, S) i32} (+ whisper frames)
+* prefill → {"tokens": (GB, S) i32} (+ frames)
+* decode  → {"tokens": (GB, 1) i32, "pos": (GB,) i32, "cache": <family cache>}
+
+Caches come from ``jax.eval_shape`` over the family's ``init_cache`` — the
+same code that builds real caches, so dry-run shapes can never drift from the
+runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.models import family_of
+from repro.models.common import ModelConfig
+
+
+def param_specs(cfg: ModelConfig):
+    fam = family_of(cfg)
+    return jax.eval_shape(lambda k: fam.init_params(cfg, k),
+                          jax.random.PRNGKey(0))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int):
+    fam = family_of(cfg)
+    return jax.eval_shape(lambda: fam.init_cache(cfg, batch, s_max))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    gb, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((gb, s), i32),
+            "labels": jax.ShapeDtypeStruct((gb, s), i32),
+        }
+        if cfg.arch_type == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (gb, cfg.encoder.n_frames, cfg.d_model), cfg.activation_dtype)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((gb, s), i32)}
+        if cfg.arch_type == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (gb, cfg.encoder.n_frames, cfg.d_model), cfg.activation_dtype)
+        return specs
+    # decode: one new token against an s-long cache
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((gb, 1), i32),
+        "pos": jax.ShapeDtypeStruct((gb,), i32),
+        "cache": cache_specs(cfg, gb, s),
+    }
+    return specs

@@ -1,0 +1,132 @@
+"""Builds the jitted, sharded step function for any (arch × shape × mesh) cell.
+
+``build_cell(cfg, shape, mesh)`` returns a :class:`CellBundle` whose
+``lowered()`` produces the pjit-lowered computation the multi-pod dry-run
+compiles — the same builders back the real train/serve entry points.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.launch import specs as specs_mod
+from repro.models import family_of
+from repro.models.common import ModelConfig
+from repro.sharding import (
+    batch_axes,
+    batch_spec,
+    cache_shardings,
+    data_shardings,
+    param_shardings,
+    use_mesh,
+)
+from repro.train.optimizer import OptimizerConfig
+from repro.train.step import make_train_state_shapes, make_train_step
+
+
+@dataclass
+class CellBundle:
+    kind: str
+    jitted: Any
+    args: tuple          # ShapeDtypeStruct pytrees to lower with
+    mesh: Mesh | None = None
+
+    def lowered(self):
+        if self.mesh is not None:
+            with use_mesh(self.mesh):
+                return self.jitted.lower(*self.args)
+        return self.jitted.lower(*self.args)
+
+
+def _logits_sharding(mesh: Mesh, gb: int):
+    return NamedSharding(mesh, batch_spec(mesh, 3, 0, gb))
+
+
+def build_train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                     use_compression: bool = False) -> CellBundle:
+    ins = specs_mod.input_specs(cfg, shape)
+    bundle = make_train_step(cfg, mesh, OptimizerConfig(),
+                             use_compression=use_compression,
+                             batch_example=ins)
+    state_shapes = jax.eval_shape(
+        make_train_state_shapes(cfg, use_compression), jax.random.PRNGKey(0))
+    return CellBundle(kind="train", jitted=bundle.step_fn,
+                      args=(state_shapes, ins), mesh=mesh)
+
+
+def _maybe_tp_only(pshard, serve_sharding: str):
+    """serve_sharding="tp": drop the FSDP axis from parameter shardings —
+    serving weights live gathered (TP-sharded, data-replicated), so decode
+    steps pay zero per-step weight all-gathers (§Perf hillclimb)."""
+    if serve_sharding != "tp":
+        return pshard
+    from repro.sharding.context import _drop_fsdp
+
+    return jax.tree.map(
+        lambda ns: NamedSharding(ns.mesh, _drop_fsdp(ns.spec)), pshard)
+
+
+def build_prefill_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                       serve_sharding: str = "fsdp") -> CellBundle:
+    fam = family_of(cfg)
+    ins = specs_mod.input_specs(cfg, shape)
+    pshapes = specs_mod.param_specs(cfg)
+    pshard = _maybe_tp_only(param_shardings(pshapes, mesh), serve_sharding)
+    inshard = data_shardings(ins, mesh)
+    cshapes = specs_mod.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    cshard = cache_shardings(cshapes, mesh)
+
+    if cfg.arch_type == "encdec":
+        def prefill_fn(params, batch):
+            return fam.prefill(cfg, params, batch["frames"], batch["tokens"],
+                               shape.seq_len)
+    else:
+        def prefill_fn(params, batch):
+            return fam.prefill(cfg, params, batch["tokens"], shape.seq_len)
+
+    jitted = jax.jit(
+        prefill_fn,
+        in_shardings=(pshard, inshard),
+        out_shardings=(_logits_sharding(mesh, shape.global_batch), cshard),
+    )
+    return CellBundle(kind="prefill", jitted=jitted, args=(pshapes, ins),
+                      mesh=mesh)
+
+
+def build_decode_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                      serve_sharding: str = "fsdp") -> CellBundle:
+    fam = family_of(cfg)
+    ins = specs_mod.input_specs(cfg, shape)
+    pshapes = specs_mod.param_specs(cfg)
+    pshard = _maybe_tp_only(param_shardings(pshapes, mesh), serve_sharding)
+    cshard = cache_shardings(ins["cache"], mesh)
+    tok_shard = NamedSharding(mesh, batch_spec(mesh, 2, 0, shape.global_batch))
+    pos_shard = NamedSharding(mesh, batch_spec(mesh, 1, 0, shape.global_batch))
+
+    def decode_fn(params, tokens, pos, cache):
+        return fam.decode_step(cfg, params, tokens, pos, cache)
+
+    jitted = jax.jit(
+        decode_fn,
+        in_shardings=(pshard, tok_shard, pos_shard, cshard),
+        out_shardings=(_logits_sharding(mesh, shape.global_batch), cshard),
+        donate_argnums=(3,),   # in-place KV update — no double cache memory
+    )
+    return CellBundle(kind="decode", jitted=jitted,
+                      args=(pshapes, ins["tokens"], ins["pos"], ins["cache"]),
+                      mesh=mesh)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+               serve_sharding: str = "fsdp", **kw) -> CellBundle:
+    if shape.kind == "train":
+        return build_train_cell(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, mesh,
+                                  serve_sharding=serve_sharding)
+    return build_decode_cell(cfg, shape, mesh, serve_sharding=serve_sharding)

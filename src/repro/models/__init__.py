@@ -1,0 +1,22 @@
+"""Model zoo: unified config + layers covering the ten assigned architectures."""
+
+from repro.models.common import (
+    EncoderConfig,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    RGLRUConfig,
+    SSMConfig,
+)
+from repro.models.registry import Family, family_of
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "MLAConfig",
+    "SSMConfig",
+    "RGLRUConfig",
+    "EncoderConfig",
+    "Family",
+    "family_of",
+]

@@ -1,0 +1,313 @@
+"""Attention mixers: MHA/GQA/MQA (global + sliding window) and MLA.
+
+Three execution modes per mixer:
+
+* ``train/prefill`` — full-sequence attention via :mod:`repro.kernels.ops`
+  (Pallas flash kernel on TPU, XLA oracle elsewhere); prefill also returns
+  the populated KV cache.
+* ``decode``        — one query token against a padded cache with an explicit
+  position mask (memory-bound; this is the roofline-dominant path for the
+  ``decode_*`` shapes).
+
+MLA (DeepSeek-V2) caches the *compressed* latent (kv_lora_rank + rope dims)
+rather than expanded K/V — 512+64 dims instead of 2×16×192 ≈ 6144 — and uses
+the absorbed-matmul trick at decode time.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.sharding import context as sharding_ctx
+from repro.models.common import (
+    MLAConfig,
+    ModelConfig,
+    apply_rope,
+    dense_init,
+    rms_norm,
+    rope_angles,
+)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, Hkv, D)   [MLA: (B, S_max, R) latent]
+    v: jax.Array  # (B, S_max, Hkv, D)   [MLA: (B, S_max, dr) rope key]
+    # int8-quantised caches (kv_cache_dtype="int8") carry per-(token, head)
+    # absmax scales; None for full-precision caches
+    k_scale: jax.Array | None = None  # (B, S_max, Hkv) f32
+    v_scale: jax.Array | None = None
+
+
+def _quantize_kv(t: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(B, S, H, D) → int8 values + (B, S, H) absmax scales."""
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+# ================================================================ GQA ======
+def init_attention(cfg: ModelConfig, key) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), d, cfg.weight_dtype),
+        "wk": dense_init(ks[1], (d, hkv, hd), d, cfg.weight_dtype),
+        "wv": dense_init(ks[2], (d, hkv, hd), d, cfg.weight_dtype),
+        "wo": dense_init(ks[3], (h, hd, d), h * hd, cfg.weight_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), cfg.weight_dtype)
+        p["bk"] = jnp.zeros((hkv, hd), cfg.weight_dtype)
+        p["bv"] = jnp.zeros((hkv, hd), cfg.weight_dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), cfg.weight_dtype)
+        p["k_norm"] = jnp.zeros((hd,), cfg.weight_dtype)
+    return p
+
+
+def _qkv(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q += p["bq"].astype(dt)
+        k += p["bk"].astype(dt)
+        v += p["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.use_rope:
+        cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attention_forward(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,              # (B, S, D)
+    positions: jax.Array,      # (B, S)
+    *,
+    window: int | None = None,
+    causal: bool = True,
+    make_cache: bool = False,
+) -> tuple[jax.Array, KVCache | None]:
+    """Train / prefill path."""
+    q, k, v = _qkv(cfg, p, x, positions)
+    if cfg.pin_attention_heads:   # §Perf iter3: refuted on this partitioner
+        q = sharding_ctx.constrain_heads(q)
+        k = sharding_ctx.constrain_heads(k)
+        v = sharding_ctx.constrain_heads(v)
+    o = ops.attention(
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+        causal=causal, window=window, impl=cfg.attn_impl,
+    ).swapaxes(1, 2)                                    # (B, S, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    cache = None
+    if make_cache:
+        if window is not None:
+            # ring layout: slot = position % (window+1); decode continues it
+            ring = window + 1
+            s = k.shape[1]
+            if s <= ring:
+                pad = [(0, 0), (0, ring - s), (0, 0), (0, 0)]
+                cache = KVCache(k=jnp.pad(k, pad), v=jnp.pad(v, pad))
+            else:
+                slots = jnp.arange(s - ring, s) % ring
+                kr = jnp.zeros((k.shape[0], ring, *k.shape[2:]), k.dtype)
+                vr = jnp.zeros_like(kr)
+                cache = KVCache(k=kr.at[:, slots].set(k[:, -ring:]),
+                                v=vr.at[:, slots].set(v[:, -ring:]))
+        elif cfg.kv_cache_dtype == "int8":
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            cache = KVCache(k=kq, v=vq, k_scale=ks, v_scale=vs)
+        else:
+            cache = KVCache(k=k, v=v)
+    return y, cache
+
+
+def attention_decode(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,              # (B, 1, D)
+    pos: jax.Array,            # (B,) int32 — index of the new token
+    cache: KVCache,            # padded to S_max
+    *,
+    window: int | None = None,
+) -> tuple[jax.Array, KVCache]:
+    """One decode step: insert the new KV at ``pos``, attend to the prefix.
+
+    Global attention writes at slot ``pos`` into a full-length cache; local
+    (windowed) attention uses a ring buffer of ``window+1`` slots — slot
+    ``pos % ring`` — so a 500k-token context costs O(window) memory.
+    """
+    q, k_new, v_new = _qkv(cfg, p, x, pos[:, None])
+    b = x.shape[0]
+    s_max = cache.k.shape[1]
+    ring = window is not None and s_max == window + 1
+    slot = pos % s_max if ring else pos
+    upd = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(c, u, i, 0))
+    quantized = cache.k.dtype == jnp.int8
+    if quantized:
+        kq_new, ks_new = _quantize_kv(k_new)
+        vq_new, vs_new = _quantize_kv(v_new)
+        k = upd(cache.k, kq_new, slot)
+        v = upd(cache.v, vq_new, slot)
+        k_scale = upd(cache.k_scale, ks_new.astype(cache.k_scale.dtype), slot)
+        v_scale = upd(cache.v_scale, vs_new.astype(cache.v_scale.dtype), slot)
+        new_cache = KVCache(k=k, v=v, k_scale=k_scale, v_scale=v_scale)
+    else:
+        k = upd(cache.k, k_new, slot)
+        v = upd(cache.v, v_new, slot)
+        new_cache = KVCache(k=k, v=v)
+    # scores over the padded cache with an explicit validity mask; the cache
+    # stays in storage dtype (decode is cache-bandwidth bound), f32 accum;
+    # int8 caches fold the absmax scales around the einsums
+    scale = cfg.head_dim ** -0.5
+    group = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, cfg.n_kv_heads, group, cfg.head_dim)
+    kk = k.astype(x.dtype) if quantized else k
+    s = jnp.einsum("bhgk,bthk->bhgt", qg, kk,
+                   preferred_element_type=jnp.float32) * scale
+    if quantized:
+        s = s * k_scale.transpose(0, 2, 1)[:, :, None, :]   # (B,Hkv,1,S)
+    t = jnp.arange(s_max)[None, None, None, :]
+    if ring:
+        # absolute position held by each slot; unwritten slots map below 0
+        delta = jnp.mod(pos[:, None, None, None] - t, s_max)
+        abs_pos = pos[:, None, None, None] - delta
+        valid = abs_pos >= 0
+    else:
+        valid = t <= pos[:, None, None, None]
+        if window is not None:
+            valid &= t >= (pos[:, None, None, None] - window)
+    s = jnp.where(valid, s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    if quantized:
+        pr = pr * v_scale.transpose(0, 2, 1)[:, :, None, :]
+    pr = pr.astype(x.dtype)
+    vv = v.astype(x.dtype) if quantized else v
+    o = jnp.einsum("bhgt,bthk->bhgk", pr, vv,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, cfg.n_heads, cfg.head_dim).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, s_max: int) -> KVCache:
+    shape = (batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.kv_cache_dtype == "int8":
+        return KVCache(
+            k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros(shape[:3], jnp.float32),
+            v_scale=jnp.zeros(shape[:3], jnp.float32))
+    return KVCache(k=jnp.zeros(shape, cfg.activation_dtype),
+                   v=jnp.zeros(shape, cfg.activation_dtype))
+
+
+# ================================================================ MLA ======
+def init_mla(cfg: ModelConfig, key) -> dict:
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    qdim = m.qk_nope_dim + m.qk_rope_dim
+    p = {
+        "wq": dense_init(ks[0], (d, h, qdim), d, cfg.weight_dtype),
+        "w_dkv": dense_init(ks[1], (d, m.kv_lora_rank), d, cfg.weight_dtype),
+        "w_kr": dense_init(ks[2], (d, m.qk_rope_dim), d, cfg.weight_dtype),
+        "w_uk": dense_init(ks[3], (m.kv_lora_rank, h, m.qk_nope_dim),
+                           m.kv_lora_rank, cfg.weight_dtype),
+        "w_uv": dense_init(ks[4], (m.kv_lora_rank, h, m.v_head_dim),
+                           m.kv_lora_rank, cfg.weight_dtype),
+        "wo": dense_init(ks[5], (h, m.v_head_dim, d), h * m.v_head_dim,
+                         cfg.weight_dtype),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), cfg.weight_dtype),
+    }
+    return p
+
+
+def _mla_q(cfg, p, x, positions):
+    m = cfg.mla
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    cos, sin = rope_angles(positions, m.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope, (cos, sin)
+
+
+def _mla_latent(cfg, p, x, positions):
+    m = cfg.mla
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(x.dtype))
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["w_kr"].astype(x.dtype))
+    cos, sin = rope_angles(positions, m.qk_rope_dim, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_forward(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+                *, make_cache: bool = False) -> tuple[jax.Array, KVCache | None]:
+    """Prefill/train: expand the latent to per-head K/V (flash-friendly)."""
+    m = cfg.mla
+    dt = x.dtype
+    q_nope, q_rope, _ = _mla_q(cfg, p, x, positions)
+    c_kv, k_rope = _mla_latent(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"].astype(dt))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"].astype(dt))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (*k_nope.shape[:3], m.qk_rope_dim))], axis=-1)
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    o = ops.attention(q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+                      causal=True, sm_scale=scale, impl="xla").swapaxes(1, 2)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
+    cache = KVCache(k=c_kv, v=k_rope) if make_cache else None
+    return y, cache
+
+
+def mla_decode(cfg: ModelConfig, p: dict, x: jax.Array, pos: jax.Array,
+               cache: KVCache) -> tuple[jax.Array, KVCache]:
+    """Absorbed decode: score against the 512+64-dim latent cache directly —
+    the KV-cache memory win that makes ``long``-context MLA serving viable."""
+    m = cfg.mla
+    dt = x.dtype
+    b = x.shape[0]
+    q_nope, q_rope, _ = _mla_q(cfg, p, x, pos[:, None])
+    c_new, kr_new = _mla_latent(cfg, p, x, pos[:, None])
+    upd = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(c, u, i, 0))
+    c_kv = upd(cache.k, c_new, pos)        # (B, S_max, R)
+    k_rope = upd(cache.v, kr_new, pos)     # (B, S_max, dr)
+    # absorb W_uk into the query:  q_eff = W_ukᵀ q_nope ∈ R^R; the latent
+    # cache stays bf16 end-to-end (f32 accumulation only)
+    q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"].astype(dt))
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    s = (jnp.einsum("bshr,btr->bhst", q_eff, c_kv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bshr,btr->bhst", q_rope, k_rope,
+                      preferred_element_type=jnp.float32)) * scale
+    t = jnp.arange(c_kv.shape[1])[None, None, None, :]
+    s = jnp.where(t <= pos[:, None, None, None], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1).astype(dt)
+    o_lat = jnp.einsum("bhst,btr->bshr", pr, c_kv,
+                       preferred_element_type=jnp.float32)
+    o = jnp.einsum("bshr,rhk->bshk", o_lat.astype(dt), p["w_uv"].astype(dt))
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
+    return y, KVCache(k=c_kv, v=k_rope)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, s_max: int) -> KVCache:
+    m = cfg.mla
+    return KVCache(
+        k=jnp.zeros((batch, s_max, m.kv_lora_rank), cfg.activation_dtype),
+        v=jnp.zeros((batch, s_max, m.qk_rope_dim), cfg.activation_dtype),
+    )

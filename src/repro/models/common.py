@@ -1,0 +1,235 @@
+"""Shared model substrate: unified config, norms, activations, RoPE, embeds.
+
+Everything is functional: parameters are plain nested-dict pytrees, modules
+are ``init_*``/``apply`` function pairs.  This keeps ``jax.eval_shape`` usable
+for the allocation-free dry-run and makes path-based sharding rules trivial.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+
+# ============================================================== configs =====
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 64
+    top_k: int = 6
+    n_shared: int = 2
+    d_ff_expert: int = 1408
+    first_dense_layers: int = 1       # deepseek: layer 0 keeps a dense FFN
+    d_ff_dense: int = 10944           # width of those dense layers
+    capacity_factor: float = 1.25
+    router_z_coef: float = 1e-3
+    aux_loss_coef: float = 1e-2
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    q_lora_rank: int | None = None    # V2-Lite projects q directly
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    expand: int = 2
+    headdim: int = 64
+    d_conv: int = 4
+    chunk: int = 128
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    d_rnn: int = 0                    # 0 → d_model
+    d_conv: int = 4
+    c: float = 8.0                    # RG-LRU decay sharpness
+    window: int = 2048                # local-attention window of attn blocks
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Whisper-style audio encoder; the conv frontend is a stub — inputs are
+    precomputed frame embeddings of shape (B, n_frames, d_model)."""
+
+    n_layers: int = 4
+    n_frames: int = 1500
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    arch_type: str = "dense"          # dense | moe | ssm | hybrid | encdec
+    n_layers: int = 4
+    d_model: int = 512
+    n_heads: int = 8
+    n_kv_heads: int = 8
+    head_dim: int = 64
+    d_ff: int = 2048
+    vocab_size: int = 32000
+    act: str = "silu"                 # gate activation: silu (SwiGLU) | gelu (GeGLU)
+    qkv_bias: bool = False
+    qk_norm: bool = False             # chameleon stabilisation
+    use_rope: bool = True             # whisper uses learned absolute positions
+    gated_ffn: bool = True            # False → plain 2-matmul MLP (whisper)
+    rope_theta: float = 10000.0
+    norm: str = "rmsnorm"
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    scale_embed: bool = False         # gemma multiplies embeds by sqrt(d)
+    logit_softcap: float | None = None
+    max_seq_len: int = 8192
+    # layer pattern for hybrids; None → all "attn" (or all "ssm" for arch ssm)
+    pattern: tuple[str, ...] | None = None
+    window: int | None = None         # sliding window for "attn_local" layers
+    mla: MLAConfig | None = None
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    rglru: RGLRUConfig | None = None
+    encoder: EncoderConfig | None = None
+    # numerics / compilation
+    dtype: str = "bfloat16"           # activation dtype
+    param_dtype: str = "float32"
+    scan_layers: bool = True
+    remat: str = "full"               # none | full — activation checkpointing
+    sequence_parallel: bool = True    # shard the residual stream's seq dim
+    cast_weights_on_gather: bool = False  # bf16 FSDP all-gathers (§Perf)
+    pin_attention_heads: bool = False     # explicit H@model reshard (§Perf)
+    kv_cache_dtype: str = "bfloat16"      # "int8" → quantised decode cache
+    attn_impl: str = "auto"           # auto | xla | pallas
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def layer_kinds(self) -> tuple[str, ...]:
+        """Per-layer mixer/ffn kind string, length n_layers.
+
+        Kinds: ``attn`` (global), ``attn_local`` (windowed), ``mla``,
+        ``ssm``, ``rec`` (RG-LRU).  FFN kind is implied: MoE configs use MoE
+        FFNs except the first ``first_dense_layers``; ssm/rec layers carry
+        their own mixing and (for rec) a dense FFN.
+        """
+        if self.pattern is not None:
+            reps = -(-self.n_layers // len(self.pattern))
+            return tuple((self.pattern * reps)[: self.n_layers])
+        if self.arch_type == "ssm":
+            return ("ssm",) * self.n_layers
+        if self.mla is not None:
+            return ("mla",) * self.n_layers
+        return ("attn",) * self.n_layers
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def weight_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def n_params(self) -> int:
+        """Analytic parameter count (cross-checked against the pytree)."""
+        from repro.models.lm import init_params  # lazy, avoids cycle
+        shapes = jax.eval_shape(lambda k: init_params(self, k),
+                                jax.random.PRNGKey(0))
+        return sum(int(math.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+
+# ============================================================ primitives ====
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm == "rmsnorm":
+        return rms_norm(x, p["scale"], cfg.norm_eps)
+    return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+
+
+def init_norm(cfg: ModelConfig, key) -> dict:
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.zeros((cfg.d_model,), cfg.weight_dtype)}
+    return {"scale": jnp.ones((cfg.d_model,), cfg.weight_dtype),
+            "bias": jnp.zeros((cfg.d_model,), cfg.weight_dtype)}
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------- RoPE ------
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions (B, S) → cos/sin (B, S, dim/2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B, S, H, D) with cos/sin (B, S, D/2) — rotate-half convention."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- embeddings ---
+def init_embed(cfg: ModelConfig, key) -> dict:
+    k1, k2 = jax.random.split(key)
+    emb = jax.random.normal(k1, (cfg.vocab_size, cfg.d_model),
+                            cfg.weight_dtype) * 0.02
+    p = {"tokens": emb}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, (cfg.d_model, cfg.vocab_size),
+                                  cfg.d_model, cfg.weight_dtype)
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p: dict, tokens: jax.Array) -> jax.Array:
+    x = p["tokens"].astype(cfg.activation_dtype)[tokens]
+    if cfg.scale_embed:
+        x *= jnp.asarray(math.sqrt(cfg.d_model), cfg.activation_dtype)
+    return x
+
+
+def unembed(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["tokens"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["unembed"].astype(x.dtype))
+    if cfg.logit_softcap:
+        cap = cfg.logit_softcap
+        logits = cap * jnp.tanh(logits / cap)
+    return logits
+
+
+# ------------------------------------------------------------ init helper ---
+def dense_init(key, shape, in_axis_size, dtype) -> jax.Array:
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    std = in_axis_size ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)

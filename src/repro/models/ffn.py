@@ -1,0 +1,150 @@
+"""Feed-forward layers: gated dense MLP (SwiGLU/GeGLU) and MoE.
+
+The MoE layer follows the DeepSeek fine-grained recipe: ``n_shared`` always-on
+shared experts plus ``n_experts`` routed experts with top-k softmax gating.
+Dispatch is capacity-based (GShard style): tokens are scattered to
+``(experts, capacity)`` buffers with one-hot matmuls, which keeps every op a
+dense einsum — shardable over the ``model`` axis (expert parallelism) with
+sharding propagation alone, no manual collectives.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, activation, dense_init
+
+
+# ------------------------------------------------------------ dense GLU ----
+def init_mlp(cfg: ModelConfig, key, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi_up": dense_init(ks[1], (d, f), d, cfg.weight_dtype),
+        "wo": dense_init(ks[2], (f, d), f, cfg.weight_dtype),
+    }
+    if cfg.gated_ffn:
+        p["wi_gate"] = dense_init(ks[0], (d, f), d, cfg.weight_dtype)
+    return p
+
+
+def mlp_forward(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    act = activation(cfg.act)
+    u = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(dt))
+    if cfg.gated_ffn:
+        g = act(jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(dt)))
+        h = g * u
+    else:
+        h = act(u)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt))
+
+
+# ----------------------------------------------------------------- MoE -----
+def init_moe(cfg: ModelConfig, key) -> dict:
+    m = cfg.moe
+    d, e, f = cfg.d_model, m.n_experts, m.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), d, jnp.float32),
+        "wi_gate": dense_init(ks[1], (e, d, f), d, cfg.weight_dtype),
+        "wi_up": dense_init(ks[2], (e, d, f), d, cfg.weight_dtype),
+        "wo": dense_init(ks[3], (e, f, d), f, cfg.weight_dtype),
+    }
+    if m.n_shared:
+        sub = jax.random.split(ks[4], 3)
+        fs = m.d_ff_expert * m.n_shared
+        p["shared"] = {
+            "wi_gate": dense_init(sub[0], (d, fs), d, cfg.weight_dtype),
+            "wi_up": dense_init(sub[1], (d, fs), d, cfg.weight_dtype),
+            "wo": dense_init(sub[2], (fs, d), fs, cfg.weight_dtype),
+        }
+    return p
+
+
+#: tokens per capacity group — capacity (and its cumsum) is computed within
+#: groups so no cross-device prefix sums appear under SPMD (GShard §3.2).
+GROUP_SIZE = 512
+
+
+def moe_forward(cfg: ModelConfig, p: dict, x: jax.Array,
+                dropless: bool = False) -> tuple[jax.Array, dict]:
+    """Capacity-grouped GShard dispatch.  Returns (y, aux losses).
+
+    Tokens are reshaped to ``(groups, group_len)`` — the group axis extends
+    the batch axis, so it inherits the batch's ``data`` sharding and every
+    cumsum/top-k stays device-local.  Expert buffers ``(G, E, C, D)`` shard
+    ``E`` over ``model`` (expert parallelism): the dispatch einsum *is* the
+    all-to-all.
+
+    ``dropless=True`` (inference): capacity = group length, so no token is
+    ever dropped — prefill and decode produce identical expert outputs for
+    the same token regardless of batching.  Training keeps the bounded
+    capacity (the throughput/quality trade the MoE papers make).
+    """
+    m = cfg.moe
+    dt = x.dtype
+    b, s, d = x.shape
+    e, k = m.n_experts, m.top_k
+    tg = min(GROUP_SIZE, s)
+    if (b * s) % tg:
+        tg = s  # fall back to one group per sequence
+    g = (b * s) // tg
+    if dropless:
+        cap = tg          # a token takes ≤1 slot per expert (distinct top-k)
+    else:
+        cap = max(1, min(tg, int(round(m.capacity_factor * tg * k / e))))
+
+    xg = x.reshape(g, tg, d)
+    # router in storage dtype with f32 accumulation — an f32 cast of xg here
+    # would drag a full f32 activation copy through the group resharding
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(dt),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (G, T, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)          # (G, T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # position of each (token, k) slot in its expert's capacity buffer;
+    # cumsum runs over the flattened (T·K) axis *within* each group
+    onehot_e = jax.nn.one_hot(expert_ids, e, dtype=jnp.int32)     # (G,T,K,E)
+    pos = (jnp.cumsum(onehot_e.reshape(g, tg * k, e), axis=1)
+           .reshape(g, tg, k, e) - 1)                             # (G,T,K,E)
+    pos = jnp.sum(pos * onehot_e, axis=-1)                        # (G,T,K)
+    keep = (pos < cap) & (pos >= 0)
+
+    # dispatch/combine tensors, K-unrolled so only (G,T,E,C) materialises
+    dispatch = None
+    combine = None
+    for kk in range(k):
+        oe = jax.nn.one_hot(expert_ids[..., kk], e, dtype=dt)     # (G,T,E)
+        oc = jax.nn.one_hot(pos[..., kk], cap, dtype=dt)          # (G,T,C)
+        term = (oe[..., :, None] * oc[..., None, :]
+                * keep[..., kk, None, None].astype(dt))           # (G,T,E,C)
+        dispatch = term if dispatch is None else dispatch + term
+        cterm = term * gate_vals[..., kk, None, None].astype(dt)
+        combine = cterm if combine is None else combine + cterm
+
+    x_e = jnp.einsum("gtec,gtd->gecd", dispatch, xg)              # (G,E,C,D)
+    act = activation(cfg.act)
+    h_g = act(jnp.einsum("gecd,edf->gecf", x_e, p["wi_gate"].astype(dt)))
+    h_u = jnp.einsum("gecd,edf->gecf", x_e, p["wi_up"].astype(dt))
+    y_e = jnp.einsum("gecf,efd->gecd", h_g * h_u, p["wo"].astype(dt))
+    y = jnp.einsum("gtec,gecd->gtd", combine, y_e).reshape(b, s, d)
+
+    if m.n_shared:
+        sp = p["shared"]
+        gs = act(jnp.einsum("bsd,df->bsf", x, sp["wi_gate"].astype(dt)))
+        us = jnp.einsum("bsd,df->bsf", x, sp["wi_up"].astype(dt))
+        y += jnp.einsum("bsf,fd->bsd", gs * us, sp["wo"].astype(dt))
+
+    # aux losses (Switch-style load balance + router z)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jnp.sum(onehot_e.astype(jnp.float32), axis=2), axis=(0, 1))
+    aux = {
+        "moe_aux": e * jnp.sum(me * ce) * m.aux_loss_coef,
+        "router_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+                    * m.router_z_coef,
+    }
+    return y, aux

@@ -1,0 +1,450 @@
+"""Unified decoder-only language model over heterogeneous layer stacks.
+
+One implementation serves all nine decoder architectures (whisper's enc-dec
+lives in :mod:`repro.models.whisper`).  A layer is a ``(mixer, ffn)`` spec:
+
+    mixer ∈ {attn, attn_local, mla, ssm, rec}
+    ffn   ∈ {glu, moe, none}
+
+The layer list is compiled into **scan groups**: a prologue of unstacked
+layers (e.g. DeepSeek's dense-FFN layer 0), a main ``lax.scan`` over stacked
+parameter periods (for hybrids the period is the architecture's repeating
+pattern, e.g. RecurrentGemma's (rec, rec, attn_local)), and an epilogue
+remainder.  Scanning keeps compiled HLO size O(1) in depth — essential for
+the 512-device dry-run — and gives layer-granular remat for free.
+
+Modes: ``train`` (loss), ``prefill`` (returns per-layer caches), ``decode``
+(one token against caches).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import recurrent as rec_mod
+from repro.sharding import context as sharding_ctx
+from repro.models.common import (
+    ModelConfig,
+    apply_norm,
+    embed_tokens,
+    init_embed,
+    init_norm,
+    unembed,
+)
+
+LayerSpec = tuple[str, str]  # (mixer, ffn)
+
+
+# ============================================================ layer specs ===
+def layer_specs(cfg: ModelConfig) -> tuple[LayerSpec, ...]:
+    specs = []
+    for i, mixer in enumerate(cfg.layer_kinds):
+        if mixer == "ssm":
+            ffn = "none"
+        elif cfg.moe is not None and i >= cfg.moe.first_dense_layers:
+            ffn = "moe"
+        else:
+            ffn = "glu"
+        specs.append((mixer, ffn))
+    return tuple(specs)
+
+
+class ScanGroups(NamedTuple):
+    prologue: tuple[LayerSpec, ...]
+    period: tuple[LayerSpec, ...]   # specs of one scanned super-layer
+    n_periods: int
+    epilogue: tuple[LayerSpec, ...]
+
+
+def scan_groups(cfg: ModelConfig) -> ScanGroups:
+    specs = layer_specs(cfg)
+    n = len(specs)
+    # prologue: leading layers that break uniformity (MoE first-dense layers)
+    n_pro = cfg.moe.first_dense_layers if cfg.moe is not None else 0
+    period_len = len(cfg.pattern) if cfg.pattern else 1
+    if not cfg.scan_layers:
+        return ScanGroups(specs, (), 0, ())
+    n_main = ((n - n_pro) // period_len) * period_len
+    n_periods = n_main // period_len
+    period = specs[n_pro : n_pro + period_len] if n_periods else ()
+    return ScanGroups(
+        prologue=specs[:n_pro],
+        period=tuple(period),
+        n_periods=n_periods,
+        epilogue=specs[n_pro + n_main :],
+    )
+
+
+# ================================================================= init =====
+def _init_layer(cfg: ModelConfig, spec: LayerSpec, key) -> dict:
+    mixer, ffn = spec
+    ks = jax.random.split(key, 3)
+    p: dict[str, Any] = {"pre_norm": init_norm(cfg, ks[0])}
+    if mixer in ("attn", "attn_local"):
+        p["attn"] = attn.init_attention(cfg, ks[1])
+    elif mixer == "mla":
+        p["attn"] = attn.init_mla(cfg, ks[1])
+    elif mixer == "ssm":
+        p["mixer"] = rec_mod.init_mamba2(cfg, ks[1])
+    elif mixer == "rec":
+        p["mixer"] = rec_mod.init_rglru(cfg, ks[1])
+    else:
+        raise ValueError(f"unknown mixer {mixer}")
+    if ffn != "none":
+        p["post_norm"] = init_norm(cfg, jax.random.fold_in(ks[2], 1))
+        if ffn == "glu":
+            d_ff = (cfg.moe.d_ff_dense if cfg.moe is not None else cfg.d_ff)
+            p["mlp"] = ffn_mod.init_mlp(cfg, ks[2], d_ff=d_ff)
+        else:
+            p["moe"] = ffn_mod.init_moe(cfg, ks[2])
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    g = scan_groups(cfg)
+    keys = jax.random.split(key, 4)
+    params: dict[str, Any] = {"embed": init_embed(cfg, keys[0]),
+                              "final_norm": init_norm(cfg, keys[1])}
+    blocks: dict[str, Any] = {}
+    for i, spec in enumerate(g.prologue):
+        blocks[f"pro_{i}"] = _init_layer(cfg, spec, jax.random.fold_in(keys[2], i))
+    if g.n_periods:
+        stack = {}
+        for j, spec in enumerate(g.period):
+            kj = jax.random.split(jax.random.fold_in(keys[3], j), g.n_periods)
+            stack[f"p{j}"] = jax.vmap(
+                lambda k, s=spec: _init_layer(cfg, s, k))(kj)
+        blocks["stack"] = stack
+    for i, spec in enumerate(g.epilogue):
+        blocks[f"epi_{i}"] = _init_layer(
+            cfg, spec, jax.random.fold_in(keys[2], 1000 + i))
+    params["blocks"] = blocks
+    return params
+
+
+# ================================================================ caches =====
+def _init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                      s_max: int):
+    mixer, _ = spec
+    if mixer in ("attn", "attn_local"):
+        # local attention only ever needs window+1 positions
+        if mixer == "attn_local" and cfg.window is not None:
+            s_max = min(s_max, cfg.window + 1)
+        return attn.init_kv_cache(cfg, batch, s_max)
+    if mixer == "mla":
+        return attn.init_mla_cache(cfg, batch, s_max)
+    if mixer == "ssm":
+        return rec_mod.init_ssm_state(cfg, batch)
+    if mixer == "rec":
+        return rec_mod.init_lru_state(cfg, batch)
+    raise ValueError(mixer)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    g = scan_groups(cfg)
+    cache: dict[str, Any] = {}
+    for i, spec in enumerate(g.prologue):
+        cache[f"pro_{i}"] = _init_layer_cache(cfg, spec, batch, s_max)
+    if g.n_periods:
+        stack = {}
+        for j, spec in enumerate(g.period):
+            one = _init_layer_cache(cfg, spec, batch, s_max)
+            stack[f"p{j}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (g.n_periods, *x.shape)),
+                one)
+        cache["stack"] = stack
+    for i, spec in enumerate(g.epilogue):
+        cache[f"epi_{i}"] = _init_layer_cache(cfg, spec, batch, s_max)
+    return cache
+
+
+# ================================================================ forward ====
+def _window_of(cfg: ModelConfig, mixer: str) -> int | None:
+    return cfg.window if mixer == "attn_local" else None
+
+
+def _apply_layer(cfg: ModelConfig, spec: LayerSpec, p: dict, x: jax.Array,
+                 positions: jax.Array, cache, mode: str, pos):
+    mixer, ffn = spec
+    # ZeRO-3: gather this layer's FSDP weight shards at the use site (no-op
+    # off-mesh); backward reduce-scatters the grads.
+    p = sharding_ctx.fsdp_use(
+        p, cast=cfg.activation_dtype if cfg.cast_weights_on_gather else None)
+    if cfg.sequence_parallel and mode == "train":
+        x = sharding_ctx.constrain_seq(x)
+    else:
+        x = sharding_ctx.constrain_batch(x)
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg, p["pre_norm"], x)
+    new_cache = cache
+    if mixer in ("attn", "attn_local"):
+        if mode == "decode":
+            y, new_cache = attn.attention_decode(
+                cfg, p["attn"], h, pos, cache, window=_window_of(cfg, mixer))
+        else:
+            y, new_cache = attn.attention_forward(
+                cfg, p["attn"], h, positions, window=_window_of(cfg, mixer),
+                make_cache=(mode == "prefill"))
+    elif mixer == "mla":
+        if mode == "decode":
+            y, new_cache = attn.mla_decode(cfg, p["attn"], h, pos, cache)
+        else:
+            y, new_cache = attn.mla_forward(cfg, p["attn"], h, positions,
+                                            make_cache=(mode == "prefill"))
+    elif mixer == "ssm":
+        if mode == "decode":
+            y, new_cache = rec_mod.mamba2_decode(cfg, p["mixer"], h, cache)
+        else:
+            y, new_cache = rec_mod.mamba2_forward(
+                cfg, p["mixer"], h, make_cache=(mode == "prefill"))
+    else:  # rec
+        if mode == "decode":
+            y, new_cache = rec_mod.rglru_decode(cfg, p["mixer"], h, cache)
+        else:
+            y, new_cache = rec_mod.rglru_forward(
+                cfg, p["mixer"], h, make_cache=(mode == "prefill"))
+    x = x + y
+    if ffn != "none":
+        h2 = apply_norm(cfg, p["post_norm"], x)
+        if ffn == "glu":
+            x = x + ffn_mod.mlp_forward(cfg, p["mlp"], h2)
+        else:
+            y2, moe_aux = ffn_mod.moe_forward(cfg, p["moe"], h2,
+                                              dropless=(mode != "train"))
+            x = x + y2
+            aux = aux + moe_aux["moe_aux"] + moe_aux["router_z"]
+    return x, new_cache, aux
+
+
+def _superlayer(cfg, period, mode):
+    """One scanned super-layer applying each spec in the period."""
+
+    def fn(x, pslices, cslices, positions, pos):
+        new_caches = []
+        aux = jnp.zeros((), jnp.float32)
+        for j, spec in enumerate(period):
+            x, nc, a = _apply_layer(cfg, spec, pslices[f"p{j}"], x, positions,
+                                    None if cslices is None else cslices[f"p{j}"],
+                                    mode, pos)
+            new_caches.append(nc)
+            aux += a
+        ncd = ({f"p{j}": c for j, c in enumerate(new_caches)}
+               if mode != "train" else None)
+        return x, ncd, aux
+
+    return fn
+
+
+def backbone(cfg: ModelConfig, params: dict, x: jax.Array,
+             positions: jax.Array, cache: dict | None = None,
+             mode: str = "train", pos: jax.Array | None = None):
+    """Shared trunk: embeddings already applied; returns (x, caches, aux)."""
+    g = scan_groups(cfg)
+    blocks = params["blocks"]
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: dict[str, Any] = {}
+
+    def apply_one(spec, p, xc, cache_i):
+        if cfg.remat != "none" and mode == "train":
+            fn = jax.checkpoint(
+                lambda pp, xx: _apply_layer(cfg, spec, pp, xx, positions,
+                                            cache_i, mode, pos))
+            return fn(p, xc)
+        return _apply_layer(cfg, spec, p, xc, positions, cache_i, mode, pos)
+
+    for i, spec in enumerate(g.prologue):
+        x, nc, a = apply_one(spec, blocks[f"pro_{i}"], x,
+                             None if cache is None else cache[f"pro_{i}"])
+        aux_total += a
+        if mode != "train":
+            new_cache[f"pro_{i}"] = nc
+
+    if g.n_periods:
+        super_fn = _superlayer(cfg, g.period, mode)
+
+        def scan_step(carry, xs):
+            xc, aux = carry
+            pslices, cslices = xs
+            y, ncd, a = super_fn(xc, pslices, cslices, positions, pos)
+            return (y, aux + a), ncd
+
+        step = scan_step
+        if cfg.remat == "full" and mode == "train":
+            step = jax.checkpoint(scan_step,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        elif cfg.remat == "dots" and mode == "train":
+            step = jax.checkpoint(
+                scan_step,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+        (x, aux_s), stack_caches = jax.lax.scan(
+            step, (x, jnp.zeros((), jnp.float32)),
+            (blocks["stack"], None if cache is None else cache["stack"]))
+        aux_total += aux_s
+        if mode != "train":
+            new_cache["stack"] = stack_caches
+
+    for i, spec in enumerate(g.epilogue):
+        x, nc, a = apply_one(spec, blocks[f"epi_{i}"], x,
+                             None if cache is None else cache[f"epi_{i}"])
+        aux_total += a
+        if mode != "train":
+            new_cache[f"epi_{i}"] = nc
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x, (new_cache if mode != "train" else None), aux_total
+
+
+def _emb(params: dict, cfg: ModelConfig | None = None) -> dict:
+    """Embed table at its gathered use-site sharding (ZeRO-3 use point)."""
+    cast = (cfg.activation_dtype
+            if cfg is not None and cfg.cast_weights_on_gather else None)
+    return sharding_ctx.fsdp_use({"embed": params["embed"]},
+                                 cast=cast)["embed"]
+
+
+# ================================================================ entry ======
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            positions: jax.Array | None = None, eval_mode: bool = False):
+    """Full forward: tokens (B, S) → logits (B, S, V) + aux loss.
+
+    ``eval_mode=True`` uses dropless MoE routing (matches prefill/decode);
+    training keeps capacity-bounded routing."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = embed_tokens(cfg, _emb(params, cfg), tokens)
+    x, _, aux = backbone(cfg, params, x, positions,
+                         mode="eval" if eval_mode else "train")
+    return unembed(cfg, _emb(params, cfg), x), aux
+
+
+#: sequence-chunk length for the cross-entropy; the (B, chunk, V) logits are
+#: the only vocab-sized activation ever materialised (re-computed in backward)
+LOSS_CHUNK = 512
+
+
+def _chunked_ce(cfg: ModelConfig, embed_params: dict, x: jax.Array,
+                labels: jax.Array):
+    """Cross-entropy without materialising (B, S, V) logits.
+
+    The final hidden states are scanned in sequence chunks; each chunk's
+    logits/softmax live only inside a rematerialised scan body.  Returns
+    (sum_nll, n_valid, n_correct).
+    """
+    b, s, d = x.shape
+    chunk = min(LOSS_CHUNK, s)
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+    xs = x.reshape(b, nc, chunk, d).swapaxes(0, 1)        # (nc, B, C, D)
+    ls = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    # vocab-parallel CE: the target logit is extracted with a masked reduce
+    # over the (model-sharded) vocab axis — never a gather, so GSPMD keeps
+    # the (B, C, V) chunk sharded over both data and model axes.
+    @jax.checkpoint
+    def body(carry, inp):
+        xc, lc = inp
+        logits = unembed(cfg, embed_params, xc).astype(jnp.float32)
+        valid = lc >= 0
+        lab = jnp.where(valid, lc, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        tgt = jnp.sum(jnp.where(iota == lab[..., None], logits, 0.0), axis=-1)
+        nll = lse - tgt
+        hit = (jnp.argmax(logits, -1) == lab) & valid
+        sum_nll, n_valid, n_hit = carry
+        return (sum_nll + jnp.sum(jnp.where(valid, nll, 0.0)),
+                n_valid + jnp.sum(valid),
+                n_hit + jnp.sum(hit)), None
+
+    init = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32))
+    (sum_nll, n_valid, n_hit), _ = jax.lax.scan(body, init, (xs, ls))
+    return sum_nll, n_valid, n_hit
+
+
+def ce_analytic_cost(cfg: ModelConfig, n_tokens: int, train: bool) -> dict:
+    """Exact analytic FLOPs/bytes of the chunked CE, used by the roofline to
+    correct XLA's count-while-once accounting of the loss scan."""
+    d, v = cfg.d_model, cfg.vocab_size
+    passes = 3.0 if train else 1.0        # fwd + (dx, dW) matmuls in bwd
+    flops = passes * 2.0 * n_tokens * d * v
+    # logits materialised once fwd (+ once recomputed, + softmax read) in f32
+    bytes_ = (4.0 if train else 2.0) * n_tokens * v * 4.0
+    return {"flops": flops, "bytes": bytes_}
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> tuple[jax.Array, dict]:
+    """Causal LM loss; batch = {"tokens": (B,S), "labels": (B,S) with -1 pad}."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = embed_tokens(cfg, _emb(params, cfg), tokens)
+    x, _, aux = backbone(cfg, params, x, positions, mode="train")
+    x = sharding_ctx.constrain_batch(x)   # CE chunks re-split the seq dim
+    sum_nll, n_valid, n_hit = _chunked_ce(cfg, _emb(params, cfg), x,
+                                          batch["labels"])
+    n_valid = jnp.maximum(n_valid, 1)
+    ce = sum_nll / n_valid
+    total = ce + aux
+    return total, {"ce": ce, "aux": aux, "accuracy": n_hit / n_valid}
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            s_max: int | None = None):
+    """Prefill: returns (logits of last position, caches padded to s_max)."""
+    b, s = tokens.shape
+    s_max = s_max or s
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = embed_tokens(cfg, _emb(params, cfg), tokens)
+    x, caches, _ = backbone(cfg, params, x, positions, mode="prefill")
+    logits = unembed(cfg, _emb(params, cfg), x[:, -1:, :])
+    if s_max > s:
+        caches = _pad_caches(cfg, caches, s, s_max)
+    return logits, caches
+
+
+def _pad_caches(cfg, caches, s, s_max):
+    def pad(leaf):
+        # sequence axis is axis 1 for KV caches (B, S, ...); states untouched
+        if leaf.ndim >= 2 and leaf.shape[1] == s and leaf.ndim >= 3:
+            pad_width = [(0, 0)] * leaf.ndim
+            pad_width[1] = (0, s_max - s)
+            return jnp.pad(leaf, pad_width)
+        return leaf
+
+    # stacked leaves have a leading period axis: (P, B, S, ...)
+    def pad_stacked(path_leaf):
+        return path_leaf
+
+    out = {}
+    for key, sub in caches.items():
+        if key == "stack":
+            out[key] = {
+                kj: jax.tree.map(
+                    lambda l: (jnp.pad(l, [(0, 0), (0, 0), (0, s_max - s)]
+                                       + [(0, 0)] * (l.ndim - 3))
+                               if l.ndim >= 4 and l.shape[2] == s else l), sub2)
+                for kj, sub2 in sub.items()}
+        else:
+            out[key] = jax.tree.map(pad, sub)
+    return out
+
+
+def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                pos: jax.Array, cache: dict):
+    """One decode step: tokens (B, 1), pos (B,) → (logits (B,1,V), new cache)."""
+    b = tokens.shape[0]
+    positions = pos[:, None]
+    x = embed_tokens(cfg, _emb(params, cfg), tokens)
+    x, new_cache, _ = backbone(cfg, params, x, positions, cache=cache,
+                               mode="decode", pos=pos)
+    logits = unembed(cfg, _emb(params, cfg), x)
+    return logits, new_cache

@@ -1,0 +1,225 @@
+"""Recurrent mixers: mamba2 (SSD) and RG-LRU (RecurrentGemma / Griffin).
+
+Both keep O(1) decode state — which is why these two architectures are the
+only ones that run the ``long_500k`` shape.  Sequence mixing goes through
+:mod:`repro.kernels.ops` (``ssd_scan`` / ``lru_scan``): the chunked Pallas
+kernels on TPU, the lax.scan oracles under XLA.
+
+Decode state per layer:
+
+* mamba2  — conv ring buffer (d_conv−1, d_inner) + SSD state (H, P, N);
+* RG-LRU  — conv ring buffer + diagonal state (D_rnn,).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.common import ModelConfig, dense_init, rms_norm
+
+
+# ---------------------------------------------------------------- conv1d ---
+def _causal_conv(x: jax.Array, w: jax.Array, prefix: jax.Array | None = None):
+    """Depthwise causal conv; x (B, S, C), w (K, C), optional prefix (B, K-1, C)
+    carried from a previous chunk.  Returns (y, new_prefix)."""
+    kk = w.shape[0]
+    if prefix is None:
+        prefix = jnp.zeros((x.shape[0], kk - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prefix, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(kk))
+    return y.astype(x.dtype), xp[:, -(kk - 1):, :]
+
+
+# ================================================================ mamba2 ===
+class SSMState(NamedTuple):
+    conv: jax.Array  # (B, d_conv-1, conv_dim)
+    ssd: jax.Array   # (B, H, P, N) f32
+
+
+def init_mamba2(cfg: ModelConfig, key) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    n_heads = d_inner // s.headdim
+    conv_dim = d_inner + 2 * s.d_state     # x, B, C share the conv (mamba2)
+    ks = jax.random.split(key, 5)
+    return {
+        # order: [z | x | B | C | dt]
+        "in_proj": dense_init(ks[0], (d, 2 * d_inner + 2 * s.d_state + n_heads),
+                              d, cfg.weight_dtype),
+        "conv_w": dense_init(ks[1], (s.d_conv, conv_dim), s.d_conv,
+                             cfg.weight_dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.weight_dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "out_norm": jnp.zeros((d_inner,), cfg.weight_dtype),
+        "out_proj": dense_init(ks[2], (d_inner, d), d_inner, cfg.weight_dtype),
+    }
+
+
+def _mamba2_split(cfg: ModelConfig, p: dict, x: jax.Array):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.headdim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xin, b_c, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + 2 * s.d_state], axis=-1)
+    return z, xin, b_c, dt, d_inner, n_heads
+
+
+def mamba2_forward(cfg: ModelConfig, p: dict, x: jax.Array,
+                   *, make_cache: bool = False
+                   ) -> tuple[jax.Array, SSMState | None]:
+    s = cfg.ssm
+    bsz, sl, _ = x.shape
+    z, xin, b_c, dt, d_inner, n_heads = _mamba2_split(cfg, p, x)
+    conv_in = jnp.concatenate([xin, b_c], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"].astype(x.dtype))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(x.dtype))
+    xin, b_mat, c_mat = jnp.split(conv_out, [d_inner, d_inner + s.d_state],
+                                  axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = jnp.exp(-dt * jnp.exp(p["a_log"]))                        # decay ∈(0,1)
+    xh = xin.reshape(bsz, sl, n_heads, s.headdim)
+    xd = (xh.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    bh = jnp.broadcast_to(b_mat[:, :, None, :],
+                          (bsz, sl, n_heads, s.d_state))
+    ch = jnp.broadcast_to(c_mat[:, :, None, :],
+                          (bsz, sl, n_heads, s.d_state))
+    y, ssd_state = ops.ssd_scan(xd, a.astype(x.dtype), bh, ch,
+                                chunk=s.chunk, impl=cfg.attn_impl)
+    y = y.astype(jnp.float32) + xh.astype(jnp.float32) * p["d_skip"][..., None]
+    y = y.reshape(bsz, sl, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    cache = SSMState(conv=conv_state, ssd=ssd_state) if make_cache else None
+    return out, cache
+
+
+def mamba2_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+                  state: SSMState) -> tuple[jax.Array, SSMState]:
+    """Single-token step: roll the conv buffer, one SSD recurrence update."""
+    s = cfg.ssm
+    bsz = x.shape[0]
+    z, xin, b_c, dt, d_inner, n_heads = _mamba2_split(cfg, p, x)
+    conv_in = jnp.concatenate([xin, b_c], axis=-1)           # (B, 1, C)
+    window = jnp.concatenate([state.conv, conv_in], axis=1)  # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    conv_out = conv_out[:, None, :].astype(x.dtype)
+    xin, b_mat, c_mat = jnp.split(conv_out, [d_inner, d_inner + s.d_state],
+                                  axis=-1)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(-dtv * jnp.exp(p["a_log"]))                             # (B,H)
+    xh = xin[:, 0].reshape(bsz, n_heads, s.headdim).astype(jnp.float32)
+    bt = b_mat[:, 0].astype(jnp.float32)                                # (B,N)
+    ct = c_mat[:, 0].astype(jnp.float32)
+    h = (state.ssd * a[..., None, None]
+         + jnp.einsum("bhp,bn->bhpn", xh * dtv[..., None], bt))
+    y = jnp.einsum("bhpn,bn->bhp", h, ct) + xh * p["d_skip"][..., None]
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, SSMState(conv=window[:, 1:, :], ssd=h)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> SSMState:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.headdim
+    conv_dim = d_inner + 2 * s.d_state
+    return SSMState(
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_dim), cfg.activation_dtype),
+        ssd=jnp.zeros((batch, n_heads, s.headdim, s.d_state), jnp.float32),
+    )
+
+
+# ================================================================ RG-LRU ===
+class LRUState(NamedTuple):
+    conv: jax.Array  # (B, d_conv-1, D_rnn)
+    h: jax.Array     # (B, D_rnn) f32
+
+
+def init_rglru(cfg: ModelConfig, key) -> dict:
+    r = cfg.rglru
+    d = cfg.d_model
+    d_rnn = r.d_rnn or d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], (d, d_rnn), d, cfg.weight_dtype),
+        "w_gate": dense_init(ks[1], (d, d_rnn), d, cfg.weight_dtype),
+        "conv_w": dense_init(ks[2], (r.d_conv, d_rnn), r.d_conv,
+                             cfg.weight_dtype),
+        "conv_b": jnp.zeros((d_rnn,), cfg.weight_dtype),
+        "w_input_gate": dense_init(ks[3], (d_rnn, d_rnn), d_rnn, cfg.weight_dtype),
+        "w_rec_gate": dense_init(ks[4], (d_rnn, d_rnn), d_rnn, cfg.weight_dtype),
+        "lam": jnp.full((d_rnn,), 2.0, jnp.float32),  # sigmoid(2)≈0.88 base decay
+        "w_out": dense_init(ks[5], (d_rnn, d), d_rnn, cfg.weight_dtype),
+    }
+
+
+def _rglru_gates(cfg, p, u):
+    """u (B,S,Drnn) → (decay a, gated input) both f32."""
+    r = cfg.rglru
+    rt = jax.nn.sigmoid(jnp.einsum("bse,ef->bsf", u.astype(jnp.float32),
+                                   p["w_rec_gate"].astype(jnp.float32)))
+    it = jax.nn.sigmoid(jnp.einsum("bse,ef->bsf", u.astype(jnp.float32),
+                                   p["w_input_gate"].astype(jnp.float32)))
+    log_a_base = jax.nn.log_sigmoid(p["lam"])           # (Drnn,)
+    log_a = r.c * rt * log_a_base                        # (B,S,Drnn) ≤ 0
+    a = jnp.exp(log_a)
+    # Griffin's normaliser keeps the state variance bounded
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    gated = beta * it * u.astype(jnp.float32)
+    return a, gated
+
+
+def rglru_forward(cfg: ModelConfig, p: dict, x: jax.Array,
+                  *, make_cache: bool = False
+                  ) -> tuple[jax.Array, LRUState | None]:
+    xg = jnp.einsum("bsd,de->bse", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(x.dtype))
+    u, conv_state = _causal_conv(u, p["conv_w"].astype(x.dtype))
+    u = u + p["conv_b"].astype(x.dtype)
+    a, gated = _rglru_gates(cfg, p, u)
+    h, hT = ops.lru_scan(gated.astype(x.dtype), a.astype(x.dtype),
+                         impl=cfg.attn_impl)
+    y = h.astype(jnp.float32) * jax.nn.gelu(xg.astype(jnp.float32))
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype),
+                     p["w_out"].astype(x.dtype))
+    cache = LRUState(conv=conv_state, h=hT) if make_cache else None
+    return out, cache
+
+
+def rglru_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+                 state: LRUState) -> tuple[jax.Array, LRUState]:
+    xg = jnp.einsum("bsd,de->bse", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(x.dtype))
+    window = jnp.concatenate([state.conv, u], axis=1)
+    u = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                   p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    u = u[:, None, :]
+    a, gated = _rglru_gates(cfg, p, u)
+    h = a[:, 0] * state.h + gated[:, 0]
+    y = h[:, None, :] * jax.nn.gelu(xg.astype(jnp.float32))
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype),
+                     p["w_out"].astype(x.dtype))
+    return out, LRUState(conv=window[:, 1:, :].astype(state.conv.dtype), h=h)
+
+
+def init_lru_state(cfg: ModelConfig, batch: int) -> LRUState:
+    r = cfg.rglru
+    d_rnn = r.d_rnn or cfg.d_model
+    return LRUState(
+        conv=jnp.zeros((batch, r.d_conv - 1, d_rnn), cfg.activation_dtype),
+        h=jnp.zeros((batch, d_rnn), jnp.float32),
+    )

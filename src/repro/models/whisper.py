@@ -1,0 +1,272 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend stubbed).
+
+Per the assignment, the modality frontend is a STUB: ``input_specs`` feeds
+precomputed frame embeddings (B, n_frames, d_model) — the two conv layers +
+mel frontend of real Whisper are out of scope.  The transformer backbone is
+faithful: LayerNorm, plain GELU MLPs, learned absolute positions, encoder
+self-attention (bidirectional), decoder self-attention (causal) + cross
+attention, tied token embeddings.
+
+Both stacks are scanned over stacked layer parameters (like
+:mod:`repro.models.lm`): sequential buffer reuse bounds training memory to a
+single layer's working set and keeps HLO size O(1) in depth.
+
+Decode caches: per-layer causal KV cache plus the cross-attention K/V
+computed once from the encoder output at prefill time.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import attention as attn
+from repro.models.common import (
+    ModelConfig,
+    apply_norm,
+    dense_init,
+    init_norm,
+)
+from repro.models.ffn import init_mlp, mlp_forward
+from repro.sharding import context as sharding_ctx
+
+
+class WhisperCache(NamedTuple):
+    self_kv: Any    # attn.KVCache with stacked (L, B, S, H, hd) leaves
+    cross_k: Any    # (L, B, F, H, hd)
+    cross_v: Any
+
+
+# ---------------------------------------------------------------- params ----
+def _init_cross(cfg: ModelConfig, key) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h, hd), d, cfg.weight_dtype),
+        "wk": dense_init(ks[1], (d, h, hd), d, cfg.weight_dtype),
+        "wv": dense_init(ks[2], (d, h, hd), d, cfg.weight_dtype),
+        "wo": dense_init(ks[3], (h, hd, d), h * hd, cfg.weight_dtype),
+    }
+
+
+def _init_enc_layer(cfg: ModelConfig, key) -> dict:
+    sub = jax.random.split(key, 4)
+    return {
+        "pre_norm": init_norm(cfg, sub[0]),
+        "attn": attn.init_attention(cfg, sub[1]),
+        "post_norm": init_norm(cfg, sub[2]),
+        "mlp": init_mlp(cfg, sub[3]),
+    }
+
+
+def _init_dec_layer(cfg: ModelConfig, key) -> dict:
+    sub = jax.random.split(key, 6)
+    return {
+        "pre_norm": init_norm(cfg, sub[0]),
+        "attn": attn.init_attention(cfg, sub[1]),
+        "xattn_norm": init_norm(cfg, sub[2]),
+        "xattn": _init_cross(cfg, sub[3]),
+        "post_norm": init_norm(cfg, sub[4]),
+        "mlp": init_mlp(cfg, sub[5]),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    enc = cfg.encoder
+    ks = jax.random.split(key, 8)
+    enc_keys = jax.random.split(ks[5], enc.n_layers)
+    dec_keys = jax.random.split(ks[6], cfg.n_layers)
+    return {
+        "embed": {"tokens": jax.random.normal(
+            ks[0], (cfg.vocab_size, cfg.d_model), cfg.weight_dtype) * 0.02},
+        "dec_pos": jax.random.normal(
+            ks[1], (cfg.max_seq_len, cfg.d_model), cfg.weight_dtype) * 0.01,
+        "enc_pos": jax.random.normal(
+            ks[2], (enc.n_frames, cfg.d_model), cfg.weight_dtype) * 0.01,
+        "final_norm": init_norm(cfg, ks[3]),
+        "enc_final_norm": init_norm(cfg, ks[4]),
+        "enc": {"stack": jax.vmap(lambda k: _init_enc_layer(cfg, k))(enc_keys)},
+        "dec": {"stack": jax.vmap(lambda k: _init_dec_layer(cfg, k))(dec_keys)},
+    }
+
+
+# --------------------------------------------------------------- encoder ----
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """frames: (B, F, d_model) precomputed embeddings (stub frontend)."""
+    b, f, _ = frames.shape
+    pos_tab = sharding_ctx.fsdp_use({"enc_pos": params["enc_pos"]})["enc_pos"]
+    x = frames.astype(cfg.activation_dtype) + \
+        pos_tab[None, :f].astype(cfg.activation_dtype)
+    positions = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32)[None], (b, f))
+
+    def layer(x, p):
+        p = sharding_ctx.fsdp_use(
+            p, cast=cfg.activation_dtype if cfg.cast_weights_on_gather else None)
+        x = (sharding_ctx.constrain_seq(x) if cfg.sequence_parallel
+             else sharding_ctx.constrain_batch(x))
+        h = apply_norm(cfg, p["pre_norm"], x)
+        y, _ = attn.attention_forward(cfg, p["attn"], h, positions,
+                                      causal=False)
+        x = x + y
+        h = apply_norm(cfg, p["post_norm"], x)
+        return x + mlp_forward(cfg, p["mlp"], h), None
+
+    step = jax.checkpoint(layer) if cfg.remat != "none" else layer
+    x, _ = jax.lax.scan(step, x, params["enc"]["stack"])
+    return apply_norm(cfg, params["enc_final_norm"], x)
+
+
+def _cross_attention(cfg, p, x, enc_k, enc_v):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    o = ops.attention(q.swapaxes(1, 2), enc_k.swapaxes(1, 2),
+                      enc_v.swapaxes(1, 2), causal=False,
+                      impl=cfg.attn_impl).swapaxes(1, 2)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
+
+
+def _enc_kv(cfg, p, enc_out):
+    dt = enc_out.dtype
+    k = jnp.einsum("bfd,dhk->bfhk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bfd,dhk->bfhk", enc_out, p["wv"].astype(dt))
+    return k, v
+
+
+# --------------------------------------------------------------- decoder ----
+def _embed_dec(cfg, params, tokens, positions):
+    emb = sharding_ctx.fsdp_use(
+        {"embed": params["embed"], "dec_pos": params["dec_pos"]})
+    x = emb["embed"]["tokens"].astype(cfg.activation_dtype)[tokens]
+    return x + emb["dec_pos"].astype(cfg.activation_dtype)[positions]
+
+
+def _dec_layer(cfg, p, x, positions, enc_out, mode, pos, cache, s_max=None):
+    """One decoder layer in train/prefill/decode mode."""
+    p = sharding_ctx.fsdp_use(
+            p, cast=cfg.activation_dtype if cfg.cast_weights_on_gather else None)
+    if mode == "train" and cfg.sequence_parallel:
+        x = sharding_ctx.constrain_seq(x)
+    elif mode != "decode":
+        x = sharding_ctx.constrain_batch(x)
+    h = apply_norm(cfg, p["pre_norm"], x)
+    new_cache = None
+    if mode == "decode":
+        self_kv, (ck, cv) = cache
+        y, self_kv = attn.attention_decode(cfg, p["attn"], h, pos, self_kv)
+        x = x + y
+        h = apply_norm(cfg, p["xattn_norm"], x)
+        x = x + _cross_attention(cfg, p["xattn"], h, ck, cv)
+        new_cache = (self_kv, (ck, cv))
+    else:
+        y, kv = attn.attention_forward(cfg, p["attn"], h, positions,
+                                       causal=True,
+                                       make_cache=(mode == "prefill"))
+        x = x + y
+        h = apply_norm(cfg, p["xattn_norm"], x)
+        ek, ev = _enc_kv(cfg, p["xattn"], enc_out)
+        x = x + _cross_attention(cfg, p["xattn"], h, ek, ev)
+        if mode == "prefill":
+            s = kv.k.shape[1]
+            pad = [(0, 0), (0, s_max - s), (0, 0), (0, 0)]
+            kv = attn.KVCache(k=jnp.pad(kv.k, pad), v=jnp.pad(kv.v, pad))
+            new_cache = (kv, (ek, ev))
+    h = apply_norm(cfg, p["post_norm"], x)
+    x = x + mlp_forward(cfg, p["mlp"], h)
+    return x, new_cache
+
+
+def _trunk(cfg: ModelConfig, params: dict, frames: jax.Array,
+           tokens: jax.Array) -> jax.Array:
+    """Teacher-forced decoder trunk → final hidden states (B, S, D)."""
+    enc_out = encode(cfg, params, frames)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = _embed_dec(cfg, params, tokens, positions)
+
+    def layer(x, p):
+        x, _ = _dec_layer(cfg, p, x, positions, enc_out, "train", None, None)
+        return x, None
+
+    step = jax.checkpoint(layer) if cfg.remat != "none" else layer
+    x, _ = jax.lax.scan(step, x, params["dec"]["stack"])
+    return apply_norm(cfg, params["final_norm"], x)
+
+
+def decode_train(cfg: ModelConfig, params: dict, frames: jax.Array,
+                 tokens: jax.Array) -> jax.Array:
+    """Teacher-forced decoder over encoder output → logits (B, S, V)."""
+    x = _trunk(cfg, params, frames, tokens)
+    return jnp.einsum("bsd,vd->bsv", x,
+                      params["embed"]["tokens"].astype(x.dtype))
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict):
+    from repro.models.lm import _chunked_ce  # shared chunked cross-entropy
+    x = _trunk(cfg, params, batch["frames"], batch["tokens"])
+    x = sharding_ctx.constrain_batch(x)
+    emb = sharding_ctx.fsdp_use({"embed": params["embed"]})["embed"]
+    sum_nll, n_valid, n_hit = _chunked_ce(cfg, emb, x, batch["labels"])
+    n_valid = jnp.maximum(n_valid, 1)
+    ce = sum_nll / n_valid
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32),
+                "accuracy": n_hit / n_valid}
+
+
+def prefill(cfg: ModelConfig, params: dict, frames: jax.Array,
+            tokens: jax.Array, s_max: int):
+    """Run encoder + teacher-forced prefix; build stacked decode caches."""
+    enc_out = encode(cfg, params, frames)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = _embed_dec(cfg, params, tokens, positions)
+
+    def layer(x, p):
+        x, cache = _dec_layer(cfg, p, x, positions, enc_out, "prefill", None,
+                              None, s_max=s_max)
+        return x, cache
+
+    x, caches = jax.lax.scan(layer, x, params["dec"]["stack"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = jnp.einsum("bsd,vd->bsv", x[:, -1:],
+                        params["embed"]["tokens"].astype(x.dtype))
+    (kv, (ck, cv)) = caches
+    return logits, WhisperCache(self_kv=kv, cross_k=ck, cross_v=cv)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int) -> WhisperCache:
+    enc = cfg.encoder
+    L = cfg.n_layers
+    kv = attn.init_kv_cache(cfg, batch, s_max)
+    kv = attn.KVCache(
+        k=jnp.broadcast_to(kv.k[None], (L, *kv.k.shape)),
+        v=jnp.broadcast_to(kv.v[None], (L, *kv.v.shape)))
+    shape = (L, batch, enc.n_frames, cfg.n_heads, cfg.head_dim)
+    return WhisperCache(
+        self_kv=kv,
+        cross_k=jnp.zeros(shape, cfg.activation_dtype),
+        cross_v=jnp.zeros(shape, cfg.activation_dtype),
+    )
+
+
+def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                pos: jax.Array, cache: WhisperCache):
+    """One decoder token against cached self/cross KV (scanned layers)."""
+    x = _embed_dec(cfg, params, tokens, pos[:, None])
+
+    def layer(x, inp):
+        p, kv, ck, cv = inp
+        x, (kv2, _) = _dec_layer(cfg, p, x, None, None, "decode", pos,
+                                 (kv, (ck, cv)))
+        return x, kv2
+
+    x, new_kv = jax.lax.scan(
+        layer, x,
+        (params["dec"]["stack"], cache.self_kv, cache.cross_k, cache.cross_v))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = jnp.einsum("bsd,vd->bsv", x,
+                        params["embed"]["tokens"].astype(x.dtype))
+    return logits, WhisperCache(self_kv=new_kv, cross_k=cache.cross_k,
+                                cross_v=cache.cross_v)

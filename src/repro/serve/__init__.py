@@ -1,0 +1,12 @@
+"""Serving runtime: continuous-batching replicas behind a NetClone dispatcher."""
+
+from repro.serve.engine import Completion, DecodeReplica, ServeRequest
+from repro.serve.server import NetCloneServer, ServeStats
+
+__all__ = [
+    "DecodeReplica",
+    "ServeRequest",
+    "Completion",
+    "NetCloneServer",
+    "ServeStats",
+]

@@ -1,0 +1,154 @@
+"""Continuous-batching decode replica.
+
+One replica = one model copy (in production: one mesh slice; here: one jitted
+model on the host device) with a fixed number of decode slots and a FIFO
+admission queue.  The NetClone contract lives at the queue boundary:
+
+* responses piggyback the *post-dequeue* queue length (STATE field);
+* a cloned request (CLO=2) is dropped on arrival if the queue is non-empty —
+  the server-side guard against stale switch state (paper §3.4).
+
+``tick()`` advances the replica by one decode step for every active slot and
+admits queued requests into free slots (prefill).  An optional
+``slowdown_ticks`` models a straggling replica (GC pause, noisy neighbour):
+the replica simply skips work for that many ticks — exactly the service-time
+variability request cloning is designed to mask.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.header import CLO_CLONE
+from repro.models import family_of
+from repro.models.common import ModelConfig
+
+
+@dataclass
+class ServeRequest:
+    req_id: int
+    prompt: np.ndarray            # (P,) int32
+    max_new_tokens: int
+    clo: int = 0                  # CLO field
+    idx: int = 0                  # filter-table index
+    arrival_tick: int = 0
+    grp: int = -1
+
+
+@dataclass
+class Completion:
+    req_id: int
+    tokens: np.ndarray
+    sid: int
+    state: int                    # piggybacked queue length
+    clo: int
+    idx: int
+    finish_tick: int = 0
+
+
+@dataclass
+class _Slot:
+    req: ServeRequest
+    pos: int
+    generated: list = field(default_factory=list)
+
+
+class DecodeReplica:
+    """A single model replica with continuous batching."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, sid: int,
+                 n_slots: int = 4, s_max: int = 128, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.sid = sid
+        self.n_slots = n_slots
+        self.s_max = s_max
+        self.queue: list[ServeRequest] = []
+        self.slots: list[_Slot | None] = [None] * n_slots
+        self.slowdown_ticks = 0
+        self.n_clone_drops = 0
+        self.n_decoded_tokens = 0
+        fam = family_of(cfg)
+        self._fam = fam
+        self._cache = fam.init_cache(cfg, n_slots, s_max)
+        self._tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        self._pos = jnp.zeros((n_slots,), jnp.int32)
+
+        def step(params, tokens, pos, cache):
+            return fam.decode_step(cfg, params, tokens, pos, cache)
+
+        self._step = jax.jit(step, donate_argnums=(3,))
+
+    # -- NetClone server-side contract ---------------------------------------
+    def submit(self, req: ServeRequest) -> bool:
+        """Returns False iff the request was dropped (CLO=2 on busy queue)."""
+        if req.clo == CLO_CLONE and len(self.queue) > 0:
+            self.n_clone_drops += 1
+            return False
+        self.queue.append(req)
+        return True
+
+    @property
+    def queue_len(self) -> int:
+        return len(self.queue)
+
+    def inject_slowdown(self, ticks: int) -> None:
+        self.slowdown_ticks += ticks
+
+    # -- engine ---------------------------------------------------------------
+    def _admit(self, tick: int) -> None:
+        for i in range(self.n_slots):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                # prefill-by-decode: feed prompt tokens one per tick start
+                # (cheap for the short prompts used in tests/examples)
+                self.slots[i] = _Slot(req=req, pos=0)
+                self._pos = self._pos.at[i].set(0)
+                self._tokens = self._tokens.at[i, 0].set(int(req.prompt[0]))
+
+    def tick(self, tick: int) -> list[Completion]:
+        """One decode step for all active slots; returns completions."""
+        if self.slowdown_ticks > 0:
+            self.slowdown_ticks -= 1
+            return []
+        self._admit(tick)
+        if all(s is None for s in self.slots):
+            return []
+        logits, self._cache = self._step(self.params, self._tokens, self._pos,
+                                         self._cache)
+        nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        done: list[Completion] = []
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            self.n_decoded_tokens += 1
+            slot.pos += 1
+            p = slot.pos
+            if p < len(slot.req.prompt):
+                tok = int(slot.req.prompt[p])        # still prefilling
+            else:
+                tok = int(nxt[i])
+                slot.generated.append(tok)
+            self._tokens = self._tokens.at[i, 0].set(tok)
+            self._pos = self._pos.at[i].set(p)
+            if len(slot.generated) >= slot.req.max_new_tokens:
+                done.append(Completion(
+                    req_id=slot.req.req_id,
+                    tokens=np.asarray(slot.generated, np.int32),
+                    sid=self.sid,
+                    state=0,  # patched below, post-dequeue
+                    clo=slot.req.clo,
+                    idx=slot.req.idx,
+                    finish_tick=tick,
+                ))
+                self.slots[i] = None
+        if done:
+            self._admit(tick)       # freed slots pull from the queue first
+            for c in done:
+                c.state = len(self.queue)   # post-dequeue queue length
+        return done

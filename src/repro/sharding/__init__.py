@@ -1,0 +1,37 @@
+"""Sharding: logical-axis rules mapping pytrees to PartitionSpecs."""
+
+from repro.sharding.context import (
+    constrain_batch,
+    current_mesh,
+    fsdp_use,
+    use_mesh,
+)
+from repro.sharding.rules import (
+    BATCH_AXES,
+    FSDP_AXIS,
+    TP_AXIS,
+    batch_axes,
+    batch_spec,
+    cache_shardings,
+    data_shardings,
+    param_shardings,
+    spec_for_cache,
+    spec_for_param,
+)
+
+__all__ = [
+    "use_mesh",
+    "current_mesh",
+    "fsdp_use",
+    "constrain_batch",
+    "FSDP_AXIS",
+    "TP_AXIS",
+    "BATCH_AXES",
+    "batch_axes",
+    "batch_spec",
+    "param_shardings",
+    "data_shardings",
+    "cache_shardings",
+    "spec_for_param",
+    "spec_for_cache",
+]

@@ -1,0 +1,141 @@
+"""Trace-time mesh context + FSDP use-site constraints.
+
+GSPMD resolves a contraction whose weight is sharded on the contracting dim
+(FSDP) either by all-gathering the *weight* (ZeRO-3, cheap) or by
+all-gathering the *activations* and all-reducing partial outputs (disastrous:
+it replicates the whole batch per device).  Sharding propagation alone picks
+the latter for our layers, so the model code pins the decision explicitly:
+
+* ``fsdp_use(layer_params)`` — constrains each weight, at its use site inside
+  the layer, to its spec **with the FSDP axis dropped** (replicated over
+  ``data``, still sharded over ``model``).  The partitioner then materialises
+  exactly one layer's gathered weights at a time (inside the scan body), and
+  the backward of the constraint reduce-scatters the gradient — ZeRO-3.
+* ``constrain_batch(x)`` — pins activations to batch-over-data sharding at
+  layer boundaries.
+
+Both are no-ops unless a mesh has been installed with ``use_mesh`` (so model
+code runs unchanged in single-device tests).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding import rules
+
+_MESH: contextvars.ContextVar[Mesh | None] = contextvars.ContextVar(
+    "repro_mesh", default=None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    tok = _MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH.reset(tok)
+
+
+def current_mesh() -> Mesh | None:
+    return _MESH.get()
+
+
+def _drop_fsdp(spec: P) -> P:
+    def drop(ax):
+        if ax == rules.FSDP_AXIS:
+            return None
+        if isinstance(ax, tuple):
+            kept = tuple(a for a in ax if a != rules.FSDP_AXIS)
+            return kept if kept else None
+        return ax
+    return P(*[drop(ax) for ax in spec])
+
+
+def fsdp_use(layer_params, cast=None):
+    """Constrain a layer's weights to their gathered (use-site) sharding.
+
+    ``cast``: optional dtype applied to floating ≥2-D weights *before* the
+    constraint, so the all-gather moves (and HBM re-reads touch) bf16 instead
+    of f32 — halves FSDP collective traffic and gathered-weight footprint
+    (hillclimb: EXPERIMENTS.md §Perf).  Gradients still accumulate in f32
+    (the cast's transpose converts the cotangent back).
+    """
+    mesh = current_mesh()
+    if mesh is None or rules.FSDP_AXIS not in mesh.shape:
+        return layer_params
+
+    def one(path, w):
+        if cast is not None and w.ndim >= 2 and \
+                w.dtype == jnp.float32:
+            w = w.astype(cast)
+        spec = rules.spec_for_param(path, w, mesh)
+        return jax.lax.with_sharding_constraint(
+            w, NamedSharding(mesh, _drop_fsdp(spec)))
+
+    return jax.tree_util.tree_map_with_path(one, layer_params)
+
+
+def constrain_batch(x: jax.Array, extra=()):
+    """Pin dim 0 to the composite batch axes (no-op without a mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    ax = rules.batch_axes(mesh)
+    if x.shape[0] % rules._axis_size(mesh, ax) != 0:
+        if "data" in mesh.shape and x.shape[0] % mesh.shape["data"] == 0:
+            ax = "data"
+        else:
+            return x
+    spec = [ax] + list(extra) + [None] * (x.ndim - 1 - len(extra))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec[: x.ndim])))
+
+
+def constrain_heads(x: jax.Array):
+    """Pin (B, S, H, hd) attention tensors to head-sharding over ``model``.
+
+    Under sequence parallelism the residual stream is S@model; Q/K/V want
+    H@model.  Left to propagation, GSPMD sometimes resolves the conflict by
+    *replicating the heads* and all-gathering full-head f32 tensors every
+    pass (observed: 25.8 GB/2 layers on chameleon-34b).  One explicit
+    constraint turns that into a single bf16 reshard."""
+    mesh = current_mesh()
+    if mesh is None or x.ndim != 4:
+        return x
+    tp = mesh.shape.get(rules.TP_AXIS, 1)
+    if tp <= 1 or x.shape[2] % tp != 0:
+        return x
+    ax = rules.batch_axes(mesh)
+    if x.shape[0] % rules._axis_size(mesh, ax) != 0:
+        ax = "data" if ("data" in mesh.shape
+                        and x.shape[0] % mesh.shape["data"] == 0) else None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(ax, None, rules.TP_AXIS, None)))
+
+
+def constrain_seq(x: jax.Array):
+    """Megatron-style sequence parallelism for the residual stream: shard
+    (B, S, D) as (batch, model, —).  The per-layer saved activation shrinks
+    by |model|×, and the partitioner converts the TP all-reduces at the layer
+    output into reduce-scatters.  Falls back to ``constrain_batch`` when the
+    sequence doesn't divide the model axis."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    tp = mesh.shape.get(rules.TP_AXIS, 1)
+    if x.ndim != 3 or tp <= 1 or x.shape[1] % tp != 0:
+        return constrain_batch(x)
+    ax = rules.batch_axes(mesh)
+    if x.shape[0] % rules._axis_size(mesh, ax) != 0:
+        if "data" in mesh.shape and x.shape[0] % mesh.shape["data"] == 0:
+            ax = "data"
+        else:
+            ax = None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(ax, rules.TP_AXIS, None)))

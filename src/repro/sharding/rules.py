@@ -1,0 +1,230 @@
+"""Path-based sharding rules: parameter pytree → PartitionSpec pytree.
+
+Scheme: 2-D sharding.  The tensor-parallel axis ``model`` shards the
+"width" dimension of every weight (heads / d_ff / experts / vocab); the
+``data`` axis is reused as an FSDP axis over the other large dimension
+(ZeRO-3: parameters, grads and optimizer state all sharded, all-gathered per
+layer on use — the scan body makes XLA prefetch the next layer's gather
+while computing the current one).  Across pods we keep pure data parallelism:
+weights are replicated over ``pod`` so the per-step all-gathers stay on ICI
+and only gradient all-reduce crosses DCI.
+
+Every rule is divisibility-guarded: an axis is applied only if it divides the
+dimension (e.g. qwen's 2 KV heads are *not* sharded over 16-way ``model``);
+otherwise that dim falls back to replication.  This makes the same rule set
+valid for full configs, smoke configs and every mesh in the dry-run.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+FSDP_AXIS = "data"
+TP_AXIS = "model"
+BATCH_AXES = ("pod", "data")  # pod is absent on single-pod meshes
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([_axis_size(mesh, n) for n in name]))
+    return mesh.shape.get(name, 1)
+
+
+def _fits(mesh: Mesh, dim: int, axis) -> bool:
+    if axis is None:
+        return True
+    sz = _axis_size(mesh, axis)
+    return sz > 1 and dim % sz == 0
+
+
+def batch_axes(mesh: Mesh):
+    """The composite batch axis for this mesh ('pod' folded in if present)."""
+    axes = tuple(a for a in BATCH_AXES if a in mesh.shape)
+    return axes if len(axes) > 1 else axes[0]
+
+
+# -- per-leaf weight rules ----------------------------------------------------
+# (regex on "<parent>/<leaf>", ndim) → desired axes per dim (None = replicate);
+# the *first* matching rule wins; stacked leaves get a leading None prepended.
+_RULES: list[tuple[str, int, tuple] ] = [
+    # embeddings
+    (r"embed/tokens$", 2, (TP_AXIS, FSDP_AXIS)),
+    (r"embed/unembed$", 2, (FSDP_AXIS, TP_AXIS)),
+    # attention (GQA): wq/wk/wv (D, H, hd), wo (H, hd, D)
+    (r"attn/wq$", 3, (FSDP_AXIS, TP_AXIS, None)),
+    (r"attn/wk$", 3, (FSDP_AXIS, TP_AXIS, None)),
+    (r"attn/wv$", 3, (FSDP_AXIS, TP_AXIS, None)),
+    (r"attn/wo$", 3, (TP_AXIS, None, FSDP_AXIS)),
+    (r"attn/b[qkv]$", 2, (TP_AXIS, None)),
+    # MLA
+    (r"attn/w_dkv$", 2, (FSDP_AXIS, None)),
+    (r"attn/w_kr$", 2, (FSDP_AXIS, None)),
+    (r"attn/w_uk$", 3, (None, TP_AXIS, None)),
+    (r"attn/w_uv$", 3, (None, TP_AXIS, None)),
+    # cross attention (whisper)
+    (r"xattn/w[qkv]$", 3, (FSDP_AXIS, TP_AXIS, None)),
+    (r"xattn/wo$", 3, (TP_AXIS, None, FSDP_AXIS)),
+    # dense MLP (also MoE shared expert)
+    (r"(mlp|shared)/wi_gate$", 2, (FSDP_AXIS, TP_AXIS)),
+    (r"(mlp|shared)/wi_up$", 2, (FSDP_AXIS, TP_AXIS)),
+    (r"(mlp|shared)/wo$", 2, (TP_AXIS, FSDP_AXIS)),
+    # MoE experts: (E, D, F) / (E, F, D) — expert parallelism over model
+    (r"moe/router$", 2, (FSDP_AXIS, None)),
+    (r"moe/wi_gate$", 3, (TP_AXIS, FSDP_AXIS, None)),
+    (r"moe/wi_up$", 3, (TP_AXIS, FSDP_AXIS, None)),
+    (r"moe/wo$", 3, (TP_AXIS, None, FSDP_AXIS)),
+    # mamba2
+    (r"mixer/in_proj$", 2, (FSDP_AXIS, TP_AXIS)),
+    (r"mixer/out_proj$", 2, (TP_AXIS, FSDP_AXIS)),
+    # RG-LRU
+    (r"mixer/w_x$", 2, (FSDP_AXIS, TP_AXIS)),
+    (r"mixer/w_gate$", 2, (FSDP_AXIS, TP_AXIS)),
+    (r"mixer/w_input_gate$", 2, (FSDP_AXIS, TP_AXIS)),
+    (r"mixer/w_rec_gate$", 2, (FSDP_AXIS, TP_AXIS)),
+    (r"mixer/w_out$", 2, (TP_AXIS, FSDP_AXIS)),
+    # whisper positions
+    (r"dec_pos$", 2, (None, FSDP_AXIS)),
+    (r"enc_pos$", 2, (None, FSDP_AXIS)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_for_param(path, leaf, mesh: Mesh) -> P:
+    ps = _path_str(path)
+    stacked = "/stack/" in f"/{ps}/"
+    shape = leaf.shape
+    core_shape = shape[1:] if stacked else shape
+    for pat, ndim, axes in _RULES:
+        if len(core_shape) == ndim and re.search(pat, ps):
+            chosen = tuple(ax if _fits(mesh, d, ax) else None
+                           for d, ax in zip(core_shape, axes))
+            # never assign the same mesh axis twice
+            seen: set = set()
+            final = []
+            for ax in chosen:
+                if ax is not None and ax in seen:
+                    final.append(None)
+                else:
+                    final.append(ax)
+                    if ax is not None:
+                        seen.add(ax)
+            if stacked:
+                final = [None] + final
+            return P(*final)
+    # fallback: shard the largest dim over FSDP if it fits, else replicate
+    if core_shape and max(core_shape) >= 1024:
+        i = int(np.argmax(core_shape))
+        if _fits(mesh, core_shape[i], FSDP_AXIS):
+            spec = [None] * len(core_shape)
+            spec[i] = FSDP_AXIS
+            if stacked:
+                spec = [None] + spec
+            return P(*spec)
+    return P()
+
+
+def param_shardings(param_tree, mesh: Mesh):
+    """ShapeDtypeStruct/array pytree → NamedSharding pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec_for_param(path, leaf, mesh)),
+        param_tree)
+
+
+# -- activations / inputs -----------------------------------------------------
+def batch_spec(mesh: Mesh, ndim: int, batch_dim: int = 0,
+               batch_size: int | None = None) -> P:
+    """Shard dim 0 (batch) over the composite batch axes when divisible."""
+    ax = batch_axes(mesh)
+    spec = [None] * ndim
+    if batch_size is None or _fits(mesh, batch_size, ax):
+        spec[batch_dim] = ax
+    elif "data" in mesh.shape and batch_size is not None \
+            and batch_size % mesh.shape["data"] == 0:
+        spec[batch_dim] = "data"
+    return P(*spec)
+
+
+def data_shardings(batch_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(
+            mesh, batch_spec(mesh, leaf.ndim, 0, leaf.shape[0])),
+        batch_tree)
+
+
+def _batch_axis_for(mesh: Mesh, b: int):
+    ax = batch_axes(mesh)
+    if _fits(mesh, b, ax):
+        return ax
+    if "data" in mesh.shape and b % mesh.shape["data"] == 0:
+        return "data"
+    return None
+
+
+def spec_for_cache(path, leaf, mesh: Mesh) -> P:
+    """Decode-state sharding: batch over the data axes; the width dimension
+    (KV heads / latent rank / conv channels / SSD heads / LRU lanes) over
+    ``model`` when divisible.  Handles scan-stacked leaves (leading period
+    dim) via the '/stack/' path marker."""
+    ps = _path_str(path)
+    name = ps.rsplit("/", 1)[-1]
+    stacked = "/stack/" in f"/{ps}/"
+    # whisper caches stack layers without a /stack/ path component
+    if not stacked and name in ("k", "v", "cross_k", "cross_v") \
+            and len(leaf.shape) == 5:
+        stacked = True
+    off = 1 if stacked else 0
+    shape = leaf.shape[off:]
+    spec: list = [None] * len(shape)
+    if len(shape) >= 1:
+        spec[0] = _batch_axis_for(mesh, shape[0])
+    tp = mesh.shape.get(TP_AXIS, 1)
+    if name in ("k", "v", "cross_k", "cross_v") and len(shape) == 4:
+        if shape[2] % tp == 0 and tp > 1:
+            spec[2] = TP_AXIS          # (B, S, Hkv, hd) — heads
+        elif shape[1] % tp == 0 and tp > 1:
+            spec[1] = TP_AXIS          # few KV heads → shard the sequence
+                                       # (flash-decode style partial softmax)
+    elif name in ("k", "v") and len(shape) == 3:
+        if shape[2] % tp == 0 and tp > 1:
+            spec[2] = TP_AXIS          # MLA latent (B, S, R) — rank
+        elif shape[1] % tp == 0 and tp > 1:
+            spec[1] = TP_AXIS
+    elif name in ("k_scale", "v_scale") and len(shape) == 3:
+        if shape[1] % tp == 0 and tp > 1:
+            spec[1] = TP_AXIS          # (B, S, Hkv) — follow the S-sharded KV
+    elif name == "conv" and len(shape) == 3:
+        if shape[2] % tp == 0 and tp > 1:
+            spec[2] = TP_AXIS          # (B, K-1, C) — channels
+    elif name == "ssd" and len(shape) == 4:
+        if shape[1] % tp == 0 and tp > 1:
+            spec[1] = TP_AXIS          # (B, H, P, N) — heads
+    elif name == "h" and len(shape) == 2:
+        if shape[1] % tp == 0 and tp > 1:
+            spec[1] = TP_AXIS          # (B, D_rnn) — lanes
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def cache_shardings(cache_tree, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec_for_cache(path, leaf, mesh)),
+        cache_tree)

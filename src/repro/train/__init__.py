@@ -1,0 +1,19 @@
+"""Training substrate: optimizer, gradient compression, step builder."""
+
+from repro.train.optimizer import OptimizerConfig, OptState, adamw_update, init_opt_state, lr_at
+from repro.train.compress import EFState, compress_grads, init_ef_state
+from repro.train.step import TrainState, TrainStepBundle, make_train_step
+
+__all__ = [
+    "OptimizerConfig",
+    "OptState",
+    "adamw_update",
+    "init_opt_state",
+    "lr_at",
+    "EFState",
+    "compress_grads",
+    "init_ef_state",
+    "TrainState",
+    "TrainStepBundle",
+    "make_train_step",
+]

@@ -1,0 +1,58 @@
+"""Gradient compression for cross-pod traffic: int8 quantisation with error
+feedback.
+
+On a multi-pod mesh the only DCI traffic in our scheme is the gradient
+all-reduce over the ``pod`` axis.  Quantising grads to int8 (per-tensor
+absmax scaling) cuts that traffic 4× vs f32 / 2× vs bf16; the residual
+(quantisation error) is carried in an error-feedback buffer and added back
+next step, which keeps SGD/Adam convergence intact (Seide et al. '14,
+Karimireddy et al. '19).
+
+The transform is applied *before* the pseudo-all-reduce boundary: under jit
+we quantise → dequantise → let XLA's sharding insert the actual all-reduce of
+the (now low-entropy) tensor.  On a real fleet the quantised representation
+is what crosses the wire via a custom reduce; here the numerics (and the
+error-feedback contract, tested in tests/test_train.py) are what we validate.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any  # pytree like grads (f32)
+
+
+def init_ef_state(params) -> EFState:
+    return EFState(residual=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, ef: EFState) -> tuple[Any, EFState]:
+    """grads (+ carried residual) → int8-roundtripped grads + new residual."""
+
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        q, scale = _quantize(g)
+        gq = _dequantize(q, scale)
+        return gq, g - gq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(ef.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tdef.unflatten([o[0] for o in out]),
+            EFState(residual=tdef.unflatten([o[1] for o in out])))

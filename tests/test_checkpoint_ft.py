@@ -1,0 +1,194 @@
+"""Checkpointing (incl. elastic reshard) and fault-tolerance manager tests."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.ft import FailureDetector, StragglerPolicy, plan_remesh
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "layer": {"w": jax.random.normal(k, (16, 8)),
+                  "b": jnp.zeros((8,))},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(t, tmp_path, step=3, metadata={"note": "x"})
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    restored, manifest = ckpt.restore(like, tmp_path, step=3)
+    assert manifest["step"] == 3 and manifest["metadata"]["note"] == "x"
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step_and_gc(tmp_path):
+    t = _tree()
+    for s in (1, 5, 9):
+        ckpt.save(t, tmp_path, step=s)
+    assert ckpt.latest_step(tmp_path) == 9
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    t = _tree()
+    ckpt.save(t, tmp_path, step=0)
+    bad = {"layer": {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32),
+                     "b": jax.ShapeDtypeStruct((8,), jnp.float32)},
+           "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    with pytest.raises(ValueError):
+        ckpt.restore(bad, tmp_path, step=0)
+
+
+def test_async_checkpointer(tmp_path):
+    t = _tree()
+    ac = ckpt.AsyncCheckpointer(tmp_path, keep=2)
+    for s in (1, 2, 3):
+        ac.save(t, step=s)
+    ac.wait()
+    assert ckpt.latest_step(tmp_path) == 3
+    steps = sorted(p.name for p in tmp_path.iterdir())
+    assert len(steps) == 2  # gc keeps 2
+
+
+def test_elastic_reshard_across_meshes(tmp_path):
+    """Save sharded on a 4-device mesh, restore onto a 2-device mesh."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >=2 devices")
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    devs = jax.devices()
+    mesh4 = jax.make_mesh((min(4, len(devs)),), ("data",),
+                          axis_types=(jax.sharding.AxisType.Auto,))
+    t = _tree()
+    t4 = jax.device_put(t, NamedSharding(mesh4, P()))
+    ckpt.save(t4, tmp_path, step=0)
+    mesh2 = jax.make_mesh((2,), ("data",),
+                          axis_types=(jax.sharding.AxisType.Auto,))
+    sh2 = {
+        "layer": {"w": NamedSharding(mesh2, P("data", None)),
+                  "b": NamedSharding(mesh2, P())},
+        "step": NamedSharding(mesh2, P()),
+    }
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    restored, _ = ckpt.restore(like, tmp_path, step=0, shardings=sh2)
+    assert restored["layer"]["w"].sharding.mesh.shape["data"] == 2
+    np.testing.assert_array_equal(np.asarray(restored["layer"]["w"]),
+                                  np.asarray(t["layer"]["w"]))
+
+
+def test_atomic_save_no_partial_dirs(tmp_path):
+    t = _tree()
+    ckpt.save(t, tmp_path, step=1)
+    assert not list(tmp_path.glob(".tmp_*"))
+
+
+# ---------------------------------------------------------------- ft --------
+def test_failure_detector_timeout():
+    fd = FailureDetector(4, timeout_s=1.0)
+    fd.heartbeat(0, t=100.0)
+    fd.heartbeat(1, t=100.0)
+    fd.heartbeat(2, t=99.8)
+    fd.heartbeat(3, t=98.0)
+    failed = fd.sweep(now=100.5)
+    assert failed == {3}
+    fd.heartbeat(3, t=100.6)
+    assert fd.sweep(now=100.7) == set()
+
+
+def test_plan_remesh_shrinks_data_axis():
+    plan = plan_remesh(healthy_hosts=list(range(12)), devices_per_host=8,
+                       model_parallel=16, prev_hosts=list(range(16)))
+    # 96 devices: dp*16 <= 96 → dp = 4 (largest power of two)
+    assert plan.data_parallel == 4 and plan.model_parallel == 16
+    assert len(plan.hosts) == 8  # 64 devices used
+    assert set(plan.dropped_hosts) == set(range(8, 16))
+
+
+def test_plan_remesh_insufficient_devices():
+    with pytest.raises(RuntimeError):
+        plan_remesh(healthy_hosts=[0], devices_per_host=8,
+                    model_parallel=16, prev_hosts=[0, 1])
+
+
+def test_straggler_policy_escalation():
+    sp = StragglerPolicy(n_hosts=4, evict_after=3)
+    lat = np.asarray([1.0, 1.0, 1.0, 1.0])
+    assert sp.observe(lat) == {}
+    slow = np.asarray([1.0, 1.0, 1.0, 10.0])
+    acts = [sp.observe(slow) for _ in range(8)]
+    clone_at = next(i for i, a in enumerate(acts) if a.get(3) == "clone")
+    evict_at = next(i for i, a in enumerate(acts) if a.get(3) == "evict")
+    assert clone_at < evict_at             # clone-mask first, then evict
+
+
+def test_straggler_policy_recovers():
+    sp = StragglerPolicy(n_hosts=3, evict_after=2)
+    slow = np.asarray([1.0, 1.0, 8.0])
+    sp.observe(slow)
+    ok = np.asarray([1.0, 1.0, 1.0])
+    for _ in range(20):
+        acts = sp.observe(ok)
+    assert acts == {} and sp.strikes[2] == 0
+
+
+# ------------------------------------------------------------ supervisor ----
+def _mk_supervisor(n_hosts=8, save_every=10):
+    from repro.ft import FleetSupervisor, SupervisorHooks
+    saved = {"step": 0}
+    meshes = []
+
+    def build_mesh(plan):
+        meshes.append(plan)
+        return ("mesh", plan.data_parallel, plan.model_parallel)
+
+    def train_step(mesh, step):
+        return np.ones(n_hosts)
+
+    def save(step):
+        saved["step"] = step
+
+    def restore():
+        return saved["step"]
+
+    hooks = SupervisorHooks(build_mesh=build_mesh, train_step=train_step,
+                            save=save, restore=restore)
+    sup = FleetSupervisor(n_hosts=n_hosts, devices_per_host=8,
+                          model_parallel=16, hooks=hooks,
+                          save_every=save_every)
+    return sup, saved, meshes
+
+
+def test_supervisor_steady_state():
+    sup, saved, meshes = _mk_supervisor()
+    log = sup.run(n_steps=30)
+    assert log.steps_run == 30
+    assert not log.remeshes and not log.evictions
+    assert saved["step"] == 30
+    assert len(meshes) == 1  # initial mesh only
+
+
+def test_supervisor_failure_restores_and_resumes():
+    sup, saved, meshes = _mk_supervisor()
+    log = sup.run(n_steps=40, events={25: [("fail", 3)]})
+    assert len(log.remeshes) == 1
+    step_at_failure, plan = log.remeshes[0]
+    assert 3 not in plan.hosts
+    assert plan.model_parallel == 16          # model axis preserved
+    assert log.restores == [20]               # resumed from last checkpoint
+    assert log.wasted_steps == step_at_failure - 20
+    assert saved["step"] == 40                # training completed after remesh
+
+
+def test_supervisor_straggler_escalates_to_eviction():
+    sup, saved, meshes = _mk_supervisor()
+    log = sup.run(n_steps=60, events={5: [("slow", 2, 10.0)]})
+    assert any(h == 2 for _, h in log.clone_masks)   # masked first
+    assert any(h == 2 for _, h in log.evictions)     # then evicted
+    assert len(log.remeshes) >= 1                    # eviction → remesh
+    assert all(2 not in p.hosts for _, p in log.remeshes)

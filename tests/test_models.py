@@ -1,0 +1,216 @@
+"""Per-architecture smoke tests (reduced configs, one step on CPU) plus
+train/prefill/decode equivalence — the assignment's required smoke matrix."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, supported_shapes
+from repro.configs.shapes import SHAPES
+from repro.models import family_of, lm, whisper
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _batch(cfg, seed=0):
+    k = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(k, (B, S + 1), 0, cfg.vocab_size)
+    batch = {"tokens": tokens[:, :S], "labels": tokens[:, 1 : S + 1]}
+    if cfg.arch_type == "encdec":
+        batch["frames"] = jax.random.normal(
+            k, (B, cfg.encoder.n_frames, cfg.d_model))
+    return batch, tokens
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_loss(arch):
+    """Reduced config: one forward/loss step, output shapes + no NaNs."""
+    cfg = get_config(arch, smoke=True)
+    fam = family_of(cfg)
+    params = fam.init_params(cfg, KEY)
+    batch, _ = _batch(cfg)
+    loss, metrics = fam.loss_fn(cfg, params, batch)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    assert loss.shape == ()
+    assert 0.0 <= float(metrics["accuracy"]) <= 1.0
+    # logits shape via family forward paths
+    if cfg.arch_type == "encdec":
+        logits = whisper.decode_train(cfg, params, batch["frames"],
+                                      batch["tokens"])
+    else:
+        logits, _ = lm.forward(cfg, params, batch["tokens"])
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: NaN logits"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step_reduces_loss(arch):
+    """A couple of SGD steps on the smoke config must reduce the loss."""
+    cfg = get_config(arch, smoke=True)
+    fam = family_of(cfg)
+    params = fam.init_params(cfg, KEY)
+    batch, _ = _batch(cfg)
+
+    def loss_of(p):
+        return fam.loss_fn(cfg, p, batch)[0]
+
+    l0 = float(loss_of(params))
+    g = jax.grad(loss_of)(params)
+    params = jax.tree.map(lambda p, gg: p - 0.5 * gg.astype(p.dtype),
+                          params, g)
+    l1 = float(loss_of(params))
+    assert np.isfinite(l1) and l1 < l0, f"{arch}: {l0} -> {l1}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_equals_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    fam = family_of(cfg)
+    params = fam.init_params(cfg, KEY)
+    batch, tokens = _batch(cfg)
+    pos = jnp.full((B,), S, jnp.int32)
+    if cfg.arch_type == "encdec":
+        full = whisper.decode_train(cfg, params, batch["frames"], tokens)
+        lg_pre, cache = whisper.prefill(cfg, params, batch["frames"],
+                                        tokens[:, :S], s_max=S + 8)
+        lg_dec, _ = whisper.decode_step(cfg, params, tokens[:, S : S + 1],
+                                        pos, cache)
+    else:
+        full, _ = lm.forward(cfg, params, tokens, eval_mode=True)
+        lg_pre, cache = lm.prefill(cfg, params, tokens[:, :S], s_max=S + 8)
+        lg_dec, _ = lm.decode_step(cfg, params, tokens[:, S : S + 1], pos,
+                                   cache)
+    np.testing.assert_allclose(np.asarray(lg_pre[:, 0]),
+                               np.asarray(full[:, S - 1]), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(lg_dec[:, 0]),
+                               np.asarray(full[:, S]), atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_multi_token_decode_consistency(arch):
+    """Decode 4 tokens autoregressively == teacher-forced forward."""
+    cfg = get_config(arch, smoke=True)
+    fam = family_of(cfg)
+    params = fam.init_params(cfg, KEY)
+    batch, tokens = _batch(cfg, seed=3)
+    n_extra = 4
+    if cfg.arch_type == "encdec":
+        full = whisper.decode_train(cfg, params, batch["frames"], tokens)
+        _, cache = whisper.prefill(cfg, params, batch["frames"],
+                                   tokens[:, : S - n_extra],
+                                   s_max=S + 8)
+        step = lambda t, p, c: whisper.decode_step(cfg, params, t, p, c)
+    else:
+        full, _ = lm.forward(cfg, params, tokens, eval_mode=True)
+        _, cache = lm.prefill(cfg, params, tokens[:, : S - n_extra],
+                              s_max=S + 8)
+        step = lambda t, p, c: lm.decode_step(cfg, params, t, p, c)
+    for i in range(n_extra):
+        pos = jnp.full((B,), S - n_extra + i, jnp.int32)
+        lg, cache = step(tokens[:, S - n_extra + i : S - n_extra + i + 1],
+                         pos, cache)
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0]), np.asarray(full[:, S - n_extra + i]),
+            atol=3e-3)
+
+
+def test_layer_pattern_recurrentgemma():
+    cfg = get_config("recurrentgemma-9b")
+    kinds = cfg.layer_kinds
+    assert len(kinds) == 38
+    assert kinds[0] == kinds[1] == "rec" and kinds[2] == "attn_local"
+    assert kinds[36] == "rec" and kinds[37] == "rec"   # 38 = 12×3 + 2
+    g = lm.scan_groups(cfg)
+    assert g.n_periods == 12 and len(g.epilogue) == 2
+
+
+def test_deepseek_first_layer_dense():
+    cfg = get_config("deepseek-v2-lite-16b")
+    specs = lm.layer_specs(cfg)
+    assert specs[0][1] == "glu" and specs[1][1] == "moe"
+    g = lm.scan_groups(cfg)
+    assert len(g.prologue) == 1 and g.n_periods == 26
+
+
+def test_param_counts_near_nameplate():
+    """Full configs land near their nameplate sizes."""
+    expect = {"gemma-7b": (8.0e9, 9.5e9),      # 8.5B w/ 256k embeddings
+              "qwen2.5-3b": (2.7e9, 3.7e9),
+              "phi3-mini-3.8b": (3.4e9, 4.1e9),
+              "mamba2-370m": (3.4e8, 4.3e8),
+              "deepseek-v2-lite-16b": (14e9, 17e9),
+              "deepseek-moe-16b": (15e9, 18.5e9),
+              "chameleon-34b": (32e9, 36e9),
+              "recurrentgemma-9b": (8.5e9, 10.5e9),
+              "codeqwen1.5-7b": (6.4e9, 8.5e9)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).n_params()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_supported_shapes_cover_assignment():
+    """40 cells: long_500k only for the sub-quadratic archs."""
+    total = sum(len(SHAPES) for _ in ARCHS)
+    assert total == 40
+    for arch in ARCHS:
+        sup = supported_shapes(arch)
+        if arch in ("mamba2-370m", "recurrentgemma-9b"):
+            assert "long_500k" in sup
+        else:
+            assert "long_500k" not in sup
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(sup)
+
+
+@pytest.mark.parametrize("arch", ["gemma-7b", "qwen2.5-3b", "chameleon-34b",
+                                  "deepseek-v2-lite-16b"])
+def test_int8_kv_cache_decode_close(arch):
+    """Beyond-paper: int8 KV cache halves decode bandwidth; logits stay
+    within ~1% relative error of the bf16-cache path."""
+    cfg = get_config(arch, smoke=True)
+    fam = family_of(cfg)
+    params = fam.init_params(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S + 1), 0,
+                              cfg.vocab_size)
+    full, _ = lm.forward(cfg, params, toks, eval_mode=True)
+    cfg8 = cfg.replace(kv_cache_dtype="int8")
+    _, cache = lm.prefill(cfg8, params, toks[:, :S], s_max=S + 8)
+    lg, _ = lm.decode_step(cfg8, params, toks[:, S : S + 1],
+                           jnp.full((B,), S, jnp.int32), cache)
+    rel = float(jnp.max(jnp.abs(lg[:, 0] - full[:, S]))) /         float(jnp.max(jnp.abs(full)))
+    assert rel < 0.05, rel
+
+
+def test_moe_capacity_drops_in_train_mode():
+    """Train mode drops over-capacity tokens; inference is dropless."""
+    from repro.models.ffn import moe_forward
+    cfg = get_config("deepseek-moe-16b", smoke=True)
+    fam = family_of(cfg)
+    params = fam.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    train_logits, _ = lm.forward(cfg, params, toks)
+    eval_logits, _ = lm.forward(cfg, params, toks, eval_mode=True)
+    # routing differs somewhere (capacity drops) but stays finite
+    assert bool(jnp.isfinite(train_logits).all())
+    assert float(jnp.max(jnp.abs(train_logits - eval_logits))) > 0
+
+
+def test_local_attention_ring_buffer_beyond_window():
+    """Decode past the ring capacity stays consistent with windowed forward."""
+    cfg = get_config("recurrentgemma-9b", smoke=True).replace(window=8)
+    from repro.models import RGLRUConfig
+    cfg = cfg.replace(rglru=RGLRUConfig(d_rnn=64, d_conv=4, c=8.0, window=8))
+    fam = family_of(cfg)
+    params = fam.init_params(cfg, KEY)
+    total = 24  # > 2× window
+    toks = jax.random.randint(jax.random.PRNGKey(9), (1, total + 1), 0,
+                              cfg.vocab_size)
+    full, _ = lm.forward(cfg, params, toks)
+    _, cache = lm.prefill(cfg, params, toks[:, :4], s_max=total + 4)
+    for i in range(4, total):
+        pos = jnp.full((1,), i, jnp.int32)
+        lg, cache = lm.decode_step(cfg, params, toks[:, i : i + 1], pos, cache)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(full[:, i]), atol=3e-3,
+                                   err_msg=f"pos {i}")

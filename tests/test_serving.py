@@ -1,0 +1,123 @@
+"""Serving-tier integration: replicas + NetClone dispatcher end to end."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core.header import CLO_CLONE, CLO_NONE
+from repro.models import family_of
+from repro.serve import DecodeReplica, NetCloneServer, ServeRequest
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    fam = family_of(cfg)
+    params = fam.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _mk(cfg, params, policy, n_replicas=3, seed=0):
+    reps = [DecodeReplica(cfg, params, sid=i, n_slots=2, s_max=64)
+            for i in range(n_replicas)]
+    return reps, NetCloneServer(reps, policy=policy, n_slots=256, seed=seed)
+
+
+def _workload(cfg, n, horizon, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(int(t), rng.integers(0, cfg.vocab_size, 3).astype(np.int32))
+            for t in np.sort(rng.integers(0, horizon, n))]
+
+
+def test_all_requests_complete_once(small_model):
+    cfg, params = small_model
+    _, srv = _mk(cfg, params, "netclone")
+    stats = srv.run(_workload(cfg, 12, 30), max_new_tokens=3, max_ticks=300)
+    assert stats.n_completed == 12
+    assert len(stats.latencies_ticks) == 12
+
+
+def test_clone_drop_on_busy_queue(small_model):
+    cfg, params = small_model
+    rep = DecodeReplica(cfg, params, sid=0, n_slots=1, s_max=64)
+    p = np.zeros(2, np.int32)
+    assert rep.submit(ServeRequest(1, p, 2, clo=CLO_NONE))
+    assert rep.submit(ServeRequest(2, p, 2, clo=CLO_NONE))
+    # queue non-empty → cloned request dropped, original accepted
+    assert not rep.submit(ServeRequest(3, p, 2, clo=CLO_CLONE))
+    assert rep.submit(ServeRequest(4, p, 2, clo=CLO_NONE))
+    assert rep.n_clone_drops == 1
+
+
+def test_filtering_suppresses_redundant(small_model):
+    cfg, params = small_model
+    _, srv = _mk(cfg, params, "netclone", seed=1)
+    stats = srv.run(_workload(cfg, 16, 8, seed=1), max_new_tokens=2,
+                    max_ticks=300)
+    assert stats.n_completed == 16
+    # at least some clones happened, and every clone outcome is accounted:
+    # filtered at the dispatcher, dropped at the replica, or (rarely) the
+    # original finished after the clone (then the original got filtered too)
+    assert stats.n_cloned > 0
+    assert stats.n_filtered + stats.n_clone_drops <= stats.n_cloned
+    assert stats.n_filtered > 0 or stats.n_clone_drops > 0
+
+
+def test_same_result_tokens_baseline_vs_netclone(small_model):
+    """Cloning must not change *what* is generated, only when."""
+    cfg, params = small_model
+    wl = _workload(cfg, 8, 4, seed=3)
+    outs = {}
+    for policy in ("baseline", "netclone"):
+        _, srv = _mk(cfg, params, policy, seed=3)
+        srv.run(wl, max_new_tokens=3, max_ticks=300)
+        outs[policy] = {rid: c.tokens.tolist() for rid, c in srv._done.items()}
+    a = sorted(outs["baseline"].values())
+    b = sorted(outs["netclone"].values())
+    assert a == b
+
+
+def test_straggler_masking(small_model):
+    """With one stalling replica, NetClone's tail beats baseline's."""
+    cfg, params = small_model
+    wl = _workload(cfg, 24, 40, seed=5)
+    p99 = {}
+    for policy in ("baseline", "netclone"):
+        reps, srv = _mk(cfg, params, policy, n_replicas=4, seed=5)
+        reps[1].inject_slowdown(60)
+        stats = srv.run(wl, max_new_tokens=3, max_ticks=500)
+        assert stats.n_completed == 24
+        p99[policy] = stats.p(95)
+    assert p99["netclone"] <= p99["baseline"]
+
+
+def test_state_piggyback_updates_dispatcher(small_model):
+    cfg, params = small_model
+    reps, srv = _mk(cfg, params, "netclone", n_replicas=2, seed=7)
+    # saturate replica 0's queue directly
+    p = np.zeros(2, np.int32)
+    for i in range(6):
+        reps[0].submit(ServeRequest(100 + i, p, 4, clo=CLO_NONE))
+    # run some ticks so completions piggyback queue state
+    for t in range(8):
+        srv.tick(t)
+    state = np.asarray(srv.state.server_state)
+    assert state[0] > 0 or reps[0].queue_len == 0
+
+
+def test_racksched_integration_routes_to_shorter_queue(small_model):
+    cfg, params = small_model
+    reps, srv = _mk(cfg, params, "netclone+racksched", n_replicas=2, seed=11)
+    # make replica 0 look loaded via piggybacked state
+    import jax.numpy as jnp
+    srv.state = srv.state._replace(
+        server_state=srv.state.server_state.at[0].set(5))
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, 2).astype(np.int32)
+               for _ in range(8)]
+    srv.submit(prompts, max_new_tokens=2, tick=0)
+    # nothing clones (one candidate busy) and JSQ avoids replica 0
+    assert srv.stats.n_cloned == 0
+    assert reps[1].queue_len + sum(s is not None for s in reps[1].slots) >= \
+        reps[0].queue_len + sum(s is not None for s in reps[0].slots)

@@ -1,0 +1,161 @@
+"""Integration + property tests for the discrete-event cluster simulator."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.simulator import NetworkCosts, Simulator
+from repro.core.workloads import (
+    BimodalService,
+    ExponentialService,
+    KVStoreService,
+    load_to_rate,
+)
+
+SVC = ExponentialService(25.0)
+
+
+def run(policy, load=0.4, n=4000, seed=0, **kw):
+    sim = Simulator(policy, SVC, n_servers=4, n_workers=8, seed=seed, **kw)
+    return sim.run(offered_load=load, n_requests=n)
+
+
+# ------------------------------------------------------------ conservation --
+@pytest.mark.parametrize("policy", ["baseline", "c-clone", "netclone",
+                                    "racksched", "netclone+racksched"])
+def test_every_request_completes_exactly_once(policy):
+    r = run(policy)
+    assert r.n_completed == r.n_requests
+
+
+def test_laedge_completes_all():
+    r = run("laedge", load=0.05, n=1500)
+    assert r.n_completed == r.n_requests
+
+
+@given(load=st.floats(0.1, 0.85), seed=st.integers(0, 10))
+@settings(max_examples=10, deadline=None)
+def test_netclone_conservation_property(load, seed):
+    r = run("netclone", load=load, n=2000, seed=seed)
+    assert r.n_completed == r.n_requests
+    # cloning bookkeeping: every filtered response came from a cloned request
+    assert r.n_filtered <= r.n_cloned
+    # clones either served (filtered or redundant-at-client) or dropped
+    assert r.n_filtered + r.n_clone_drops + r.n_redundant_at_client \
+        == r.n_cloned
+
+
+def test_latencies_positive_and_bounded_below():
+    r = run("baseline", load=0.2)
+    # minimum latency = 2 links + switch + server overhead + client rx
+    c = NetworkCosts()
+    floor = 2 * c.link + 0.4 + c.server_overhead + c.client_rx
+    assert (r.latencies_us > floor).all()
+
+
+# ------------------------------------------------------- throughput sanity --
+def test_throughput_matches_offered_below_saturation():
+    r = run("baseline", load=0.5, n=8000)
+    assert r.throughput_mrps == pytest.approx(r.offered_rate_mrps, rel=0.15)
+
+
+def test_cclone_saturates_at_half():
+    base = run("baseline", load=0.9, n=8000)
+    cc = run("c-clone", load=0.9, n=8000)
+    assert cc.throughput_mrps < 0.75 * base.throughput_mrps
+
+
+# ---------------------------------------------------------- M/M/c analytics --
+def test_against_mmc_queueing_theory():
+    """Baseline random routing to n single-worker servers ≈ n × M/M/1.
+    Mean sojourn for M/M/1: 1/(µ−λ)."""
+    svc = ExponentialService(25.0, jitter_p=0.0)
+    sim = Simulator("baseline", svc, n_servers=4, n_workers=1, seed=3,
+                    costs=NetworkCosts(link=0, server_overhead=0,
+                                       client_rx=0, client_tx=0))
+    load = 0.5
+    r = sim.run(offered_load=load, n_requests=60_000)
+    mu = 1 / 25.0
+    lam = load * mu  # per server
+    expect = 1 / (mu - lam)   # 50 µs
+    assert r.mean_us == pytest.approx(expect, rel=0.08)
+
+
+# ----------------------------------------------------------- paper dynamics --
+def test_netclone_improves_tail_at_low_load():
+    base = run("baseline", load=0.25, n=12_000)
+    nc = run("netclone", load=0.25, n=12_000)
+    assert nc.p99_us < base.p99_us
+
+
+def test_dynamic_cloning_declines_with_load():
+    lo = run("netclone", load=0.15, n=6000)
+    hi = run("netclone", load=0.9, n=6000)
+    assert lo.n_cloned / lo.n_requests > hi.n_cloned / hi.n_requests
+
+
+def test_server_side_drop_engages_under_load():
+    hi = run("netclone", load=0.8, n=8000)
+    assert hi.n_clone_drops > 0
+
+
+def test_empty_queue_fraction_decreases_with_load():
+    lo = run("netclone", load=0.15, n=6000)
+    hi = run("netclone", load=0.9, n=6000)
+    assert lo.empty_queue_fraction > hi.empty_queue_fraction
+
+
+def test_switch_failure_recovery():
+    sim = Simulator("netclone", SVC, n_servers=4, n_workers=8, seed=5)
+    rate = load_to_rate(0.5, SVC, 4, 8)
+    dur = 30_000 / rate
+    t_fail, t_rec = 0.4 * dur, 0.6 * dur
+    sim.schedule_switch_failure(t_fail=t_fail, t_recover=t_rec)
+    r = sim.run(offered_load=0.5, n_requests=30_000, timeline_bin_us=dur / 40)
+    edges, thr = r.throughput_timeline
+    down = thr[(edges >= t_fail * 1.05) & (edges < t_rec * 0.95)]
+    after = thr[(edges >= t_rec * 1.1) & (edges < 0.9 * dur)]
+    before = thr[(edges >= 0.1 * dur) & (edges < t_fail * 0.95)]
+    assert down.mean() < 0.3 * before.mean()
+    assert after.mean() > 0.8 * before.mean()
+    assert r.n_completed < r.n_requests      # requests during failure lost
+
+
+def test_heterogeneous_worker_counts():
+    r = Simulator("netclone+racksched", SVC, n_servers=4,
+                  worker_counts=[8, 8, 4, 4], seed=2).run(0.5, 5000)
+    assert r.n_completed == r.n_requests
+
+
+def test_kv_workload_scan_head_of_line():
+    """SCAN-heavy mixes have far worse baseline p99 than GET-only."""
+    kv_hot = KVStoreService(p_scan=0.10)
+    kv_cold = KVStoreService(p_scan=0.0)
+    a = Simulator("baseline", kv_hot, n_servers=4, n_workers=8, seed=1)
+    b = Simulator("baseline", kv_cold, n_servers=4, n_workers=8, seed=1)
+    ra = a.run(0.4, 8000)
+    rb = b.run(0.4, 8000)
+    assert ra.p99_us > 3 * rb.p99_us
+
+
+def test_deterministic_given_seed():
+    a = run("netclone", seed=42)
+    b = run("netclone", seed=42)
+    assert a.p99_us == b.p99_us and a.n_cloned == b.n_cloned
+
+
+# ---------------------------------------------------- beyond-paper: hedging --
+def test_hedge_policy_clones_only_stragglers():
+    r = run("hedge", load=0.4, n=6000, delay_us=75.0)
+    assert r.n_completed == r.n_requests
+    # hedges fire for roughly P(service > delay) of requests — far fewer
+    # than NetClone's idle-pair clones at the same load
+    assert 0 < r.n_cloned < 0.25 * r.n_requests
+
+
+def test_hedge_vs_netclone_low_load():
+    """NetClone's clones race from t=0; hedging pays the delay floor."""
+    nc = run("netclone", load=0.15, n=10_000)
+    hg = run("hedge", load=0.15, n=10_000, delay_us=75.0)
+    assert nc.p99_us < hg.p99_us
+    assert hg.p99_us < run("baseline", load=0.15, n=10_000).p99_us
