@@ -5,13 +5,19 @@ against the paper's findings, and (when dry-run artifacts exist under
 results/dryrun) the roofline table.
 
     PYTHONPATH=src python -m benchmarks.run [figures...]
+    PYTHONPATH=src python -m benchmarks.run --engine fleetsim
     REPRO_BENCH_FAST=1  → reduced request counts (CI)
+
+``--engine fleetsim`` runs the policy × load × seed grid through the jitted,
+vmapped FleetSim (one device program for the whole grid) and writes
+``results/bench/BENCH_fleetsim.json`` with wall-clock + simulated-MRPS
+numbers and the DES cross-validation scoreboard.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
-import sys
 import time
 from pathlib import Path
 
@@ -63,10 +69,97 @@ def _microbenches() -> list[str]:
     return lines
 
 
+def run_fleetsim(args) -> None:
+    """One jitted sweep over the full policy × load × seed grid, plus the
+    DES cross-validation scoreboard on a subset of overlapping points."""
+    import os
+
+    from repro.core.workloads import ExponentialService
+    from repro.fleetsim import FleetConfig, ServiceSpec
+    from repro.fleetsim.sweep import sweep_grid
+    from repro.fleetsim.validate import cross_validate
+
+    fast = bool(int(os.environ.get("REPRO_BENCH_FAST", "0")))
+    policies = ["baseline", "c-clone", "netclone", "racksched",
+                "netclone+racksched"]
+    loads = [0.1, 0.2, 0.35, 0.5, 0.65, 0.8, 0.9, 0.95][:args.loads]
+    seeds = list(range(args.seeds))
+    svc = ExponentialService(25.0)
+    cfg = FleetConfig(n_servers=args.servers, n_workers=args.workers,
+                      n_ticks=min(args.ticks, 10_000) if fast else args.ticks,
+                      service=ServiceSpec.from_process(svc))
+
+    n_cfg = len(policies) * len(loads) * len(seeds)
+    print(f"== fleetsim sweep: {len(policies)} policies x {len(loads)} loads "
+          f"x {len(seeds)} seeds = {n_cfg} configurations, "
+          f"{cfg.n_ticks} ticks each ==")
+    sw = sweep_grid(svc, policies, loads, seeds, cfg=cfg)
+    print(f"compile {sw.compile_s:.1f}s  run {sw.wall_clock_s:.1f}s  "
+          f"{sw.simulated_requests/1e6:.1f}M simulated requests  "
+          f"{sw.simulated_mrps:.2f} MRPS-simulated")
+
+    keys = list(sw.results[0].row().keys())
+    print(",".join(keys))
+    for r in sw.results:
+        if r.seed == seeds[0]:
+            print(",".join(str(r.row()[k]) for k in keys))
+
+    checks = []
+    if not args.no_validate:
+        print("\n== DES cross-validation (documented tolerances in "
+              "repro/fleetsim/validate.py) ==")
+        checks = cross_validate(
+            svc, ["baseline", "netclone", "c-clone"], [0.2, 0.5, 0.8],
+            n_servers=args.servers, n_workers=args.workers,
+            n_requests=8_000 if fast else 20_000)
+        for c in checks:
+            print(("[PASS] " if c.ok else "[FAIL] ") + c.describe())
+        print(f"{sum(c.ok for c in checks)}/{len(checks)} points agree")
+
+    outdir = Path("results/bench")
+    outdir.mkdir(parents=True, exist_ok=True)
+    payload = {
+        "engine": "fleetsim",
+        "n_configs": sw.n_configs,
+        "n_ticks": cfg.n_ticks,
+        "wall_clock_s": round(sw.wall_clock_s, 3),
+        "compile_s": round(sw.compile_s, 3),
+        "simulated_requests": sw.simulated_requests,
+        "simulated_mrps": round(sw.simulated_mrps, 3),
+        "rows": [r.row() for r in sw.results],
+        "cross_validation": [
+            {"policy": c.policy, "load": c.load, "pass": bool(c.ok),
+             "saturated": bool(c.saturated), "detail": c.describe()}
+            for c in checks],
+    }
+    (outdir / "BENCH_fleetsim.json").write_text(json.dumps(payload, indent=1))
+    print(f"\nwrote {outdir / 'BENCH_fleetsim.json'}")
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("figures", nargs="*", help="figure names (DES engine)")
+    ap.add_argument("--engine", choices=["figures", "fleetsim"],
+                    default="figures")
+    ap.add_argument("--ticks", type=int, default=50_000,
+                    help="fleetsim ticks per configuration")
+    ap.add_argument("--loads", type=int, default=8,
+                    help="number of load points (fleetsim)")
+    ap.add_argument("--seeds", type=int, default=5,
+                    help="seeds per (policy, load) cell (fleetsim)")
+    ap.add_argument("--servers", type=int, default=6)
+    ap.add_argument("--workers", type=int, default=15)
+    ap.add_argument("--no-validate", action="store_true",
+                    help="skip the DES cross-validation pass")
+    args = ap.parse_args()
+
+    if args.engine == "fleetsim":
+        run_fleetsim(args)
+        return
+
     from benchmarks.figures import ALL_FIGURES
 
-    wanted = sys.argv[1:] or list(ALL_FIGURES)
+    wanted = args.figures or list(ALL_FIGURES)
     outdir = Path("results/bench")
     outdir.mkdir(parents=True, exist_ok=True)
 

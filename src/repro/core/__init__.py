@@ -21,6 +21,7 @@ from repro.core.tables import FilterTables, GroupTable, StateTable, fingerprint_
 from repro.core.switch import NetCloneSwitch
 from repro.core.workloads import (
     BimodalService,
+    BoundedParetoService,
     ExponentialService,
     KVStoreService,
     ServiceProcess,
@@ -40,5 +41,6 @@ __all__ = [
     "ServiceProcess",
     "ExponentialService",
     "BimodalService",
+    "BoundedParetoService",
     "KVStoreService",
 ]

@@ -406,7 +406,10 @@ class Simulator:
             edges = np.arange(0.0, tmax + bin_us, bin_us)
             hist, _ = np.histogram(done_t[~np.isnan(done_t)], bins=edges)
             timeline = (edges[:-1], hist / bin_us)
-        ft = getattr(getattr(self.policy, "switch", None), "filter_tables", None)
+        ft = getattr(getattr(self.policy, "switch", None), "filter_tables",
+                     None)
+        if ft is None:  # host-timer policies (hedge) own their tables
+            ft = getattr(self.policy, "filter_tables", None)
         return SimResult(
             policy=self.policy.name,
             offered_load=load,

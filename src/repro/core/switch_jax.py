@@ -129,6 +129,61 @@ def filter_tick(state: SwitchState, req_id: jax.Array, idx: jax.Array,
 
 
 @jax.jit
+def filter_tick_vectorized(state: SwitchState, req_id: jax.Array,
+                           idx: jax.Array, clo: jax.Array, sid: jax.Array,
+                           qlen: jax.Array,
+                           active: jax.Array | None = None,
+                           ) -> tuple[SwitchState, FilterResult]:
+    """One-scatter form of :func:`filter_tick` for fleet-scale ticks.
+
+    ``filter_tick`` replays lanes sequentially (a B-step ``lax.scan``);
+    inside a time-stepped fleet simulation that inner scan dominates runtime.
+    This variant resolves a whole tick with O(B²) lane comparisons + one
+    scatter.  Lanes sharing one (req_id, idx) key alternate hit/insert against
+    the slot exactly as the sequential filter does (a parked fingerprint makes
+    the group's first lane the hit; otherwise the second), for any group size.
+    The single knowable divergence is a *different-id* slot collision within
+    one tick (an unrelated insert landing between a parked fingerprint and its
+    owner's response in the same tick): the response is dropped here where the
+    sequential filter would forward it — the client-side dedup absorbs either
+    outcome.  ``active`` masks padding lanes.
+    """
+    if active is None:
+        active = jnp.ones(req_id.shape, bool)
+    req_id = req_id.astype(jnp.int32)
+    idx = idx.astype(jnp.int32)
+    n_tables, n_slots = state.filter_tables.shape
+
+    # lines 15-16: last write wins per server, in lane order (masked lanes
+    # scatter out of bounds and are dropped)
+    sid_m = jnp.where(active, sid.astype(jnp.int32),
+                      jnp.int32(state.server_state.shape[0]))
+    server_state = state.server_state.at[sid_m].set(
+        qlen.astype(jnp.int32), mode="drop")
+
+    part = active & (clo > 0)                     # lanes touching FilterT
+    slot = fingerprint_hash_jax(req_id, n_slots)
+    occupant = state.filter_tables[idx, slot]
+    parked = occupant == req_id                   # fingerprint already there
+    lane = jnp.arange(req_id.shape[0])
+    same = (part[:, None] & part[None, :]
+            & (req_id[:, None] == req_id[None, :])
+            & (idx[:, None] == idx[None, :]))
+    k = jnp.sum(same & (lane[None, :] < lane[:, None]), axis=1)  # group pos
+    n = jnp.sum(same, axis=1)                                    # group size
+    # sequential replay of a key group alternates hit/insert starting from
+    # the parked state: lane at even position drops iff parked, odd iff not
+    drop = part & jnp.where(k % 2 == 0, parked, ~parked)
+    # slot value after the whole group: parked0 XOR (group size odd)
+    parked_final = jnp.where(n % 2 == 0, parked, ~parked)
+    value = jnp.where(parked_final, req_id, jnp.int32(0))
+    idx_m = jnp.where(part, idx, jnp.int32(n_tables))
+    tables = state.filter_tables.at[idx_m, slot].set(value, mode="drop")
+    new_state = state._replace(server_state=server_state, filter_tables=tables)
+    return new_state, FilterResult(drop=drop)
+
+
+@jax.jit
 def wipe(state: SwitchState) -> SwitchState:
     """Switch failure: lose all soft state (§3.6)."""
     return SwitchState(

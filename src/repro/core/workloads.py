@@ -111,6 +111,46 @@ class BimodalService(ServiceProcess):
         return f"Bimodal({1-self.p_long:.0%}-{self.short:g},{self.p_long:.0%}-{self.long:g})"
 
 
+class BoundedParetoService(ServiceProcess):
+    """Heavy-tailed RPCs: bounded Pareto on ``[xm, cap]`` with shape ``alpha``.
+
+    The standard microsecond-RPC stress workload (RackSched, R2P2 use the same
+    family): most requests are near ``xm`` but the tail stretches to ``cap``,
+    which is exactly the regime where cloning pays.  The *size* is intrinsic to
+    the request (shared by both copies); execution adds ±10% noise + jitter.
+    """
+
+    def __init__(self, xm: float = 10.0, alpha: float = 1.2,
+                 cap: float = 1000.0, **kw):
+        super().__init__(**kw)
+        if not (0 < xm < cap):
+            raise ValueError("need 0 < xm < cap")
+        if alpha <= 0:
+            raise ValueError("alpha must be positive")
+        self.xm, self.alpha, self.cap = float(xm), float(alpha), float(cap)
+        r = xm / cap
+        if abs(alpha - 1.0) < 1e-9:
+            mean = xm * np.log(cap / xm) / (1.0 - r)
+        else:
+            mean = (xm ** alpha / (1.0 - r ** alpha)) * (alpha / (alpha - 1.0)) \
+                * (xm ** (1.0 - alpha) - cap ** (1.0 - alpha))
+        self.mean = float(mean)
+
+    def _inverse_cdf(self, u):
+        """Inverse CDF of the bounded Pareto — shared with the JAX fleetsim."""
+        r = (self.xm / self.cap) ** self.alpha
+        return self.xm / (1.0 - u * (1.0 - r)) ** (1.0 / self.alpha)
+
+    def intrinsic(self, rng, n):
+        return self._inverse_cdf(rng.random(n))
+
+    def _execute_base(self, rng, base):
+        return base * float(rng.uniform(0.9, 1.1))
+
+    def __repr__(self):
+        return f"BPareto(xm={self.xm:g},a={self.alpha:g},cap={self.cap:g})"
+
+
 class KVStoreService(ServiceProcess):
     """Replicated in-memory KV store (Redis / Memcached experiments, §5.5).
 

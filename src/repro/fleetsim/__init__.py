@@ -1,0 +1,43 @@
+"""FleetSim — the fully-jitted, vmapped, device-resident cluster simulator.
+
+Where ``repro.core.simulator`` replays one (policy, load, seed) configuration
+at a time in Python, FleetSim keeps the entire rack — switch soft state,
+per-server FCFS queues and workers, client receiver threads — in JAX arrays,
+advances it with one ``lax.scan``, and sweeps thousands of configurations in
+a single ``vmap``-ped device program.  The NetClone data-plane semantics are
+shared with ``repro.core.switch_jax`` (the same state layout and filter
+rules), and results are cross-validated against the DES in
+``repro.fleetsim.validate`` / ``tests/test_fleetsim.py``.
+"""
+
+from repro.fleetsim.config import (
+    POLICY_IDS,
+    POLICY_NAMES,
+    FleetConfig,
+    ServiceSpec,
+)
+from repro.fleetsim.engine import RunParams, make_params, simulate, simulate_batch
+from repro.fleetsim.metrics import FleetResult, summarize
+from repro.fleetsim.state import FleetState, Metrics, init_fleet_state
+from repro.fleetsim.sweep import SweepResult, sweep_grid
+from repro.fleetsim.validate import CrossCheck, cross_validate
+
+__all__ = [
+    "FleetConfig",
+    "ServiceSpec",
+    "POLICY_IDS",
+    "POLICY_NAMES",
+    "RunParams",
+    "make_params",
+    "simulate",
+    "simulate_batch",
+    "FleetResult",
+    "summarize",
+    "FleetState",
+    "Metrics",
+    "init_fleet_state",
+    "SweepResult",
+    "sweep_grid",
+    "CrossCheck",
+    "cross_validate",
+]

@@ -1,0 +1,172 @@
+"""FleetSim static configuration.
+
+Everything in :class:`FleetConfig` is a *compile-time* constant: it fixes the
+array shapes of the fleet state and is passed to ``jax.jit`` as a static
+argument.  Per-run knobs that vary across a sweep (policy, offered rate, seed,
+straggler factors, failure window) are traced values, so one compiled program
+serves the whole policy × load × seed grid under ``vmap``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+
+from repro.core.workloads import (
+    BimodalService,
+    BoundedParetoService,
+    ExponentialService,
+    ServiceProcess,
+)
+
+# Policy ids — traced scalars, so one device program sweeps all policies.
+POLICY_BASELINE = 0
+POLICY_CCLONE = 1
+POLICY_NETCLONE = 2
+POLICY_RACKSCHED = 3
+POLICY_NCRS = 4
+
+POLICY_IDS = {
+    "baseline": POLICY_BASELINE,
+    "c-clone": POLICY_CCLONE,
+    "netclone": POLICY_NETCLONE,
+    "racksched": POLICY_RACKSCHED,
+    "netclone+racksched": POLICY_NCRS,
+}
+POLICY_NAMES = {v: k for k, v in POLICY_IDS.items()}
+
+SERVICE_EXPONENTIAL = "exponential"
+SERVICE_BIMODAL = "bimodal"
+SERVICE_PARETO = "pareto"
+
+
+@dataclass(frozen=True)
+class ServiceSpec:
+    """Hashable, array-free description of a service-time process.
+
+    Mirrors ``repro.core.workloads``: ``intrinsic`` demand is drawn per
+    request (shared by both copies of a clone pair), execution noise + the
+    jitter spike are drawn independently per execution.
+    """
+
+    kind: str
+    params: tuple[float, ...]
+    jitter_p: float = 0.01
+    jitter_mult: float = 15.0
+    mean: float = 0.0           # pre-jitter mean, for load normalisation
+
+    @property
+    def effective_mean(self) -> float:
+        return self.mean * (1.0 + self.jitter_p * (self.jitter_mult - 1.0))
+
+    @classmethod
+    def exponential(cls, mean: float = 25.0, **kw) -> "ServiceSpec":
+        return cls(SERVICE_EXPONENTIAL, (float(mean),), mean=float(mean), **kw)
+
+    @classmethod
+    def bimodal(cls, short: float = 25.0, long: float = 250.0,
+                p_long: float = 0.10, **kw) -> "ServiceSpec":
+        mean = (1 - p_long) * short + p_long * long
+        return cls(SERVICE_BIMODAL, (float(short), float(long), float(p_long)),
+                   mean=float(mean), **kw)
+
+    @classmethod
+    def pareto(cls, xm: float = 10.0, alpha: float = 1.2,
+               cap: float = 1000.0, **kw) -> "ServiceSpec":
+        mean = BoundedParetoService(xm, alpha, cap).mean
+        return cls(SERVICE_PARETO, (float(xm), float(alpha), float(cap)),
+                   mean=float(mean), **kw)
+
+    @classmethod
+    def from_process(cls, svc: ServiceProcess) -> "ServiceSpec":
+        """Map a DES service process onto its array-form spec."""
+        kw = dict(jitter_p=svc.jitter_p, jitter_mult=svc.jitter_mult)
+        if isinstance(svc, ExponentialService):
+            return cls.exponential(svc.mean, **kw)
+        if isinstance(svc, BimodalService):
+            return cls.bimodal(svc.short, svc.long, svc.p_long, **kw)
+        if isinstance(svc, BoundedParetoService):
+            return cls.pareto(svc.xm, svc.alpha, svc.cap, **kw)
+        raise TypeError(f"no fleetsim mapping for {type(svc).__name__}")
+
+
+@dataclass(frozen=True)
+class FleetConfig:
+    """Shapes + calibrated latency constants of one simulated rack.
+
+    Latency constants default to the DES's :class:`NetworkCosts` /
+    :class:`SwitchCosts` so the two engines are directly comparable.
+    """
+
+    n_servers: int = 6
+    n_workers: int = 15
+    n_clients: int = 2
+    # FCFS slots per server.  Ring buffers make capacity nearly free (no
+    # per-tick op scales with it), so the default is deep enough that beyond-
+    # saturation runs build DES-like unbounded-queue latency instead of
+    # shedding copies through overflow (which is still counted when hit).
+    queue_cap: int = 512
+    max_arrivals: int = 12       # arrival lanes per tick (Poisson is clipped)
+    max_responses: int = 32      # response lanes per tick (clipping counted)
+    dt_us: float = 1.0
+    n_ticks: int = 50_000
+    warmup_frac: float = 0.1
+    service: ServiceSpec = ServiceSpec.exponential(25.0)
+    # switch tables.  The prototype's 2×2^17 slots bound collisions for
+    # millions of in-flight ids; a simulated rack keeps O(100) fingerprints
+    # live, so far smaller tables preserve the collision behaviour while
+    # keeping the per-tick scatter (and its operand copy) cheap.
+    n_filter_tables: int = 2
+    n_filter_slots: int = 2 ** 10
+    # client-side first-response fingerprints: sized above the worst-case
+    # in-flight population (n_servers × (workers + queue_cap)) so collisions
+    # that evict a live entry (n_dedup_evicted) stay rare even past saturation
+    n_dedup_slots: int = 2 ** 13
+    # transport/processing constants (µs) — match simulator.NetworkCosts
+    link_us: float = 0.5
+    server_overhead_us: float = 1.0
+    client_rx_us: float = 0.68
+    client_tx_us: float = 0.15
+    pipeline_pass_us: float = 0.4
+    # response-filter backend: "vectorized" (one scatter/tick, default),
+    # "scan" (exact lane-sequential switch_jax.filter semantics), or
+    # "pallas" (kernels.fingerprint_filter — the VMEM-resident kernel)
+    filter_backend: str = "vectorized"
+    # log-spaced latency histogram (≈6% bin resolution over 1 µs … 2 s)
+    hist_bins: int = 256
+    hist_lo_us: float = 1.0
+    hist_growth: float = 1.06
+
+    def __post_init__(self):
+        if self.n_filter_slots & (self.n_filter_slots - 1):
+            raise ValueError("n_filter_slots must be a power of two")
+        if self.n_dedup_slots & (self.n_dedup_slots - 1):
+            raise ValueError("n_dedup_slots must be a power of two")
+        if self.filter_backend not in ("vectorized", "scan", "pallas"):
+            raise ValueError(f"unknown filter_backend {self.filter_backend!r}")
+        if self.n_servers < 2:
+            raise ValueError("fleetsim requires at least two servers")
+        # req ids ride in float32 payload lanes; keep them exactly
+        # representable (REQ_ID ≤ n_ticks × max_arrivals < 2^24)
+        if self.n_ticks * self.max_arrivals >= 2 ** 24:
+            raise ValueError("n_ticks × max_arrivals must stay below 2^24 "
+                             "(REQ_IDs are carried in float32 payloads)")
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_servers * (self.n_servers - 1)
+
+    @property
+    def duration_us(self) -> float:
+        return self.n_ticks * self.dt_us
+
+    @property
+    def warmup_us(self) -> float:
+        return self.warmup_frac * self.duration_us
+
+    def with_arrival_headroom(self, max_rate_per_us: float) -> "FleetConfig":
+        """Size the per-tick arrival lanes so Poisson clipping is negligible
+        at the hottest point of a sweep (≈6σ above the mean count)."""
+        lam = max_rate_per_us * self.dt_us
+        lanes = int(math.ceil(lam + 6.0 * math.sqrt(max(lam, 1e-9)) + 2.0))
+        return replace(self, max_arrivals=max(4, lanes))

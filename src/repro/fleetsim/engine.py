@@ -1,0 +1,409 @@
+"""FleetSim engine: one ``lax.scan`` advances the rack, ``vmap`` sweeps it.
+
+Fixed-timestep (``dt_us``) time-stepped simulation of the full NetClone
+testbed — open-loop Poisson clients, ToR switch with GrpT/StateT/FilterT,
+FCFS multi-worker servers with the CLO=2 stale-state drop rule, and
+client receiver threads with per-response RX cost and redundant-response
+dedup.  The entire cluster lives in :class:`FleetState` arrays; a tick is:
+
+1. (recovery tick only) wipe switch soft state — §3.6 failover;
+2. route the tick's Poisson arrivals under the traced policy id
+   (``policies.route``), assign REQ_IDs from the switch sequence;
+3. advance workers by ``dt``, collect completions;
+4. apply the server-side CLO=2 drop rule, enqueue survivors into the
+   per-server FCFS rings, pull the oldest queued jobs onto free workers and
+   draw their execution times (intrinsic base × per-execution noise ×
+   straggler slowdown + jitter spikes, as in ``core.workloads``);
+5. compact completions into the response lanes and pass them through the
+   switch response path — StateT update + fingerprint filter (vectorized /
+   scan / Pallas backend);
+6. deliver survivors to clients: dedup, receiver-backlog queuing, latency
+   histogram + counters.
+
+Feedback staleness is one tick: responses processed at tick *t* steer
+routing from tick *t+1*, matching the ≈1 µs server→switch path of the DES.
+
+Deliberate approximations vs the DES (documented for the cross-validation
+tolerances in ``validate.py``): latencies quantize to ``dt``; in-network
+constants are folded into a per-request additive term instead of delaying
+state feedback; the clone recirculation pass (0.4 µs < dt) is not modelled;
+queue capacity and per-tick response lanes are finite (both overflows are
+counted and sized to be vanishingly rare below saturation).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.header import CLO_CLONE
+from repro.core.switch_jax import (
+    _filter_step,
+    filter_tick_vectorized,
+    group_pairs_array,
+    wipe,
+)
+from repro.fleetsim.config import (
+    POLICY_CCLONE,
+    SERVICE_BIMODAL,
+    SERVICE_EXPONENTIAL,
+    SERVICE_PARETO,
+    FleetConfig,
+)
+from repro.fleetsim.policies import dedup_tick, route
+from repro.fleetsim.state import (
+    QF,
+    QF_BASE,
+    QF_CLIENT,
+    QF_CLO,
+    QF_IDX,
+    QF_RID,
+    QF_TARR,
+    WF,
+    WF_CLIENT,
+    WF_CLO,
+    WF_IDX,
+    WF_REM,
+    WF_RID,
+    WF_TARR,
+    FleetState,
+    Metrics,
+    init_fleet_state,
+)
+
+
+class RunParams(NamedTuple):
+    """Per-run traced inputs — the axes a sweep maps over."""
+
+    policy_id: jax.Array      # () int32
+    rate_per_us: jax.Array    # () f32 — offered arrival rate
+    seed: jax.Array           # () int32
+    slowdown: jax.Array       # (S,) f32 — straggler execution multipliers
+    fail_from_tick: jax.Array  # () int32 — switch dark from this tick …
+    fail_until_tick: jax.Array  # () int32 — … until this tick (then wiped)
+
+
+def make_params(cfg: FleetConfig, policy_id: int, rate_per_us: float,
+                seed: int, slowdown=None,
+                fail_window: tuple[int, int] | None = None) -> RunParams:
+    if slowdown is None:
+        slowdown = np.ones(cfg.n_servers, np.float32)
+    f0, f1 = fail_window if fail_window is not None \
+        else (cfg.n_ticks + 1, cfg.n_ticks + 1)
+    return RunParams(policy_id=jnp.int32(policy_id),
+                     rate_per_us=jnp.float32(rate_per_us),
+                     seed=jnp.int32(seed),
+                     slowdown=jnp.asarray(slowdown, jnp.float32),
+                     fail_from_tick=jnp.int32(f0),
+                     fail_until_tick=jnp.int32(f1))
+
+
+# --------------------------------------------------------------- sampling ---
+def _intrinsic(cfg: FleetConfig, u):
+    """Per-request base demand (shared by both copies of a clone pair),
+    from a pre-drawn uniform in [0, 1)."""
+    p = cfg.service.params
+    if cfg.service.kind == SERVICE_EXPONENTIAL:
+        return jnp.full(u.shape, p[0], jnp.float32)
+    if cfg.service.kind == SERVICE_BIMODAL:
+        short, long, p_long = p
+        return jnp.where(u < p_long, long, short).astype(jnp.float32)
+    if cfg.service.kind == SERVICE_PARETO:
+        xm, alpha, cap = p
+        u = jnp.minimum(u, 1.0 - 1e-7)
+        r = (xm / cap) ** alpha
+        return (xm / (1.0 - u * (1.0 - r)) ** (1.0 / alpha)).astype(jnp.float32)
+    raise ValueError(cfg.service.kind)
+
+
+def _execute(cfg: FleetConfig, key, base):
+    """One execution's runtime: per-copy randomness + the jitter spike.
+    One uniform draw feeds both (inverse-CDF), keeping the tick cheap."""
+    u = jax.random.uniform(key, base.shape + (2,))
+    if cfg.service.kind == SERVICE_EXPONENTIAL:
+        # dummy-RPC spin drawn at the server (§5.1.2)
+        dur = -jnp.log1p(-u[..., 0] * (1.0 - 1e-7)) * base
+    else:
+        dur = base * (0.9 + 0.2 * u[..., 0])
+    spike = u[..., 1] < cfg.service.jitter_p
+    return jnp.where(spike, dur * cfg.service.jitter_mult, dur)
+
+
+def _rank_among_earlier(mask_2d):
+    """For (S, L) masks: count of earlier True lanes in the same row."""
+    c = jnp.cumsum(mask_2d.astype(jnp.int32), axis=-1)
+    return c - mask_2d.astype(jnp.int32)
+
+
+# ------------------------------------------------------------------- step ---
+def _make_step(cfg: FleetConfig, params: RunParams, group_pairs: jax.Array):
+    S, W, Q, C = cfg.n_servers, cfg.n_workers, cfg.queue_cap, cfg.n_clients
+    A = cfg.max_arrivals
+    D = 2 * A                    # delivery lanes: originals then clones
+    K = min(cfg.max_responses, S * W)   # response lanes after compaction
+    dt = jnp.float32(cfg.dt_us)
+    srv_ids = jnp.arange(S)
+    # in-network constants added to every recorded latency (client TX + four
+    # link hops + two pipeline passes; C-Clone pays the doubled sender cost)
+    const_lat = (cfg.client_tx_us + 4 * cfg.link_us + 2 * cfg.pipeline_pass_us
+                 + jnp.where(params.policy_id == POLICY_CCLONE,
+                             cfg.client_tx_us, 0.0))
+    t0_us = jnp.float32(cfg.warmup_us)
+    t1_us = jnp.float32(cfg.duration_us)
+    log_g = float(np.log(cfg.hist_growth))
+
+    def step(state: FleetState, xs):
+        tick, n_raw = xs
+        m = state.metrics
+        t_us = tick.astype(jnp.float32) * dt
+        down = (tick >= params.fail_from_tick) & (tick < params.fail_until_tick)
+        switch = state.switch
+        dedup = state.dedup
+        # §3.6 recovery: all soft state lost, REQ_IDs restart from 1; the
+        # clients' pending-request fingerprints of lost requests go with it
+        recover = tick == params.fail_until_tick
+        switch = jax.tree.map(lambda a, b: jnp.where(recover, a, b),
+                              wipe(switch), switch)
+        dedup = jnp.where(recover, jnp.zeros_like(dedup), dedup)
+
+        key, k_arr, k_exec = jax.random.split(state.key, 3)
+
+        # -- arrivals (Poisson count precomputed outside the scan) -------
+        n_arr = jnp.minimum(n_raw, A)
+        arr_active = jnp.arange(A) < n_arr
+        m = m._replace(n_truncated=m.n_truncated + (n_raw - n_arr),
+                       n_dropped_down=m.n_dropped_down
+                       + jnp.where(down, n_arr, 0))
+        arr_active &= ~down
+        m = m._replace(n_arrivals=m.n_arrivals + arr_active.sum())
+
+        # one uniform block covers every per-lane attribute draw
+        u = jax.random.uniform(k_arr, (A, 6))
+        to_int = lambda col, n: jnp.minimum(
+            (u[:, col] * n).astype(jnp.int32), n - 1)
+        grp = to_int(0, cfg.n_groups)
+        fidx = to_int(1, cfg.n_filter_tables)
+        client = to_int(2, C)
+        base = _intrinsic(cfg, u[:, 3])
+        r1 = to_int(4, S)
+        r2 = (r1 + 1 + to_int(5, S - 1)) % S
+
+        dst1, dst2, cloned, clo1, clo2 = route(
+            params.policy_id, switch.server_state, group_pairs, grp, r1, r2)
+        req_id = switch.seq + 1 + jnp.arange(A, dtype=jnp.int32)
+        switch = switch._replace(seq=switch.seq + jnp.int32(A))
+        m = m._replace(n_cloned=m.n_cloned + (arr_active & cloned).sum())
+
+        # delivery lanes: clone copies sort after originals, mirroring the
+        # recirculated clone leaving the pipeline second
+        d_dst = jnp.concatenate([dst1, dst2]).astype(jnp.int32)
+        d_clo = jnp.concatenate([clo1, clo2])
+        d_act = jnp.concatenate([arr_active, arr_active & cloned])
+
+        # -- workers advance, completions (busy ⇔ REM > 0) ---------------
+        meta = state.workers.meta                        # (S, W, WF)
+        was_busy = meta[:, :, WF_REM] > 0
+        rem = jnp.where(was_busy, meta[:, :, WF_REM] - dt, 0.0)
+        done = was_busy & (rem <= 0)                     # (S, W)
+        busy_after = was_busy & ~done
+        n_free = (~busy_after).sum(axis=1)               # (S,)
+        rq = state.queues
+        n_queued = rq.count                              # (S,)
+
+        # -- CLO=2 drop rule --------------------------------------------
+        # A clone is dropped iff the server's *wait queue* is non-empty when
+        # it arrives.  This tick's completions drain min(n_free, n_queued)
+        # jobs first; earlier arrival lanes to the same server then occupy
+        # the leftover free workers before queuing.  Two passes resolve the
+        # (rare) dependence of one clone's fate on an earlier clone's.
+        q_left = jnp.maximum(n_queued - n_free, 0)       # still waiting
+        free_left = jnp.maximum(n_free - n_queued, 0)    # still free
+        onehot = (d_dst[None, :] == srv_ids[:, None])    # (S, D)
+        is_clone = d_clo == CLO_CLONE
+        n_earlier = _rank_among_earlier(onehot & (d_act & ~is_clone)[None, :])
+        occupied = (q_left[d_dst] > 0) | \
+            (jnp.take_along_axis(n_earlier, d_dst[None, :], axis=0)[0]
+             > free_left[d_dst])
+        drop0 = is_clone & d_act & occupied
+        keep0 = d_act & ~drop0
+        n_earlier1 = _rank_among_earlier(onehot & keep0[None, :])
+        occupied1 = (q_left[d_dst] > 0) | \
+            (jnp.take_along_axis(n_earlier1, d_dst[None, :], axis=0)[0]
+             > free_left[d_dst])
+        clone_drop = is_clone & d_act & occupied1
+        d_keep = d_act & ~clone_drop
+        m = m._replace(n_clone_drops=m.n_clone_drops + clone_drop.sum())
+
+        # -- enqueue into the FCFS rings ---------------------------------
+        # the r-th kept lane for a server lands r slots past its tail
+        lane_m = onehot & d_keep[None, :]                # (S, D)
+        lane_rank = _rank_among_earlier(lane_m)          # (S, D)
+        rank_own = jnp.take_along_axis(lane_rank, d_dst[None, :], axis=0)[0]
+        ovf = d_keep & (n_queued[d_dst] + rank_own >= Q)
+        m = m._replace(n_overflow=m.n_overflow + ovf.sum())
+        enq_ok = d_keep & ~ovf
+        slot = (rq.head[d_dst] + n_queued[d_dst] + rank_own) % Q
+        payload = jnp.stack([                            # (D, QF)
+            jnp.tile(base, 2),
+            jnp.full(D, t_us),
+            jnp.tile(req_id, 2).astype(jnp.float32),
+            d_clo.astype(jnp.float32),
+            jnp.tile(fidx, 2).astype(jnp.float32),
+            jnp.tile(client, 2).astype(jnp.float32),
+        ], axis=1)
+        flat_q = rq.data.reshape(S * Q, QF)
+        qrow = jnp.where(enq_ok, d_dst * Q + slot, jnp.int32(S * Q))
+        flat_q = flat_q.at[qrow].set(payload, mode="drop")
+        count1 = rq.count + (onehot & enq_ok[None, :]).sum(axis=1)
+
+        # -- dequeue: ring head onto free workers ------------------------
+        R = min(W, Q)
+        n_start = jnp.minimum(count1, n_free)            # (S,)
+        r = jnp.arange(R)
+        startm = r[None, :] < n_start[:, None]           # (S, R)
+        deq_slot = (rq.head[:, None] + r[None, :]) % Q   # (S, R)
+        job = flat_q[srv_ids[:, None] * Q + deq_slot]    # (S, R, QF)
+        # r-th free worker of each server, via rank matching (no sort)
+        wfree = ~busy_after
+        wrank = _rank_among_earlier(wfree)               # (S, W)
+        sel = (wfree[:, None, :]
+               & (wrank[:, None, :] == r[None, :, None]))  # (S, R, W)
+        wcol = jnp.einsum("srw,w->sr", sel.astype(jnp.int32), jnp.arange(W))
+        start_base = job[:, :, QF_BASE]
+        exec_dur = _execute(cfg, k_exec, start_base) * params.slowdown[:, None]
+        wrow = jnp.where(startm, srv_ids[:, None] * W + wcol, jnp.int32(S * W))
+        # responses are read from the PRE-overwrite worker metadata
+        meta_flat = jnp.concatenate(
+            [jnp.where(busy_after, rem, 0.0)[:, :, None],
+             meta[:, :, 1:]], axis=2).reshape(S * W, WF)
+        new_meta = jnp.stack([
+            exec_dur + cfg.server_overhead_us,
+            job[:, :, QF_TARR], job[:, :, QF_RID], job[:, :, QF_CLO],
+            job[:, :, QF_IDX], job[:, :, QF_CLIENT]], axis=2)   # (S, R, WF)
+        workers = state.workers._replace(
+            meta=meta_flat.at[wrow.reshape(-1)]
+            .set(new_meta.reshape(-1, WF), mode="drop").reshape(S, W, WF))
+        queues = rq._replace(head=(rq.head + n_start) % Q,
+                             count=count1 - n_start,
+                             data=flat_q.reshape(S, Q, QF))
+
+        # -- compact completions into the response lanes -----------------
+        qlen_after = queues.count                        # (S,)
+        done_flat = done.reshape(-1)                     # (S·W,)
+        m = m._replace(
+            n_resp=m.n_resp + done_flat.sum(),
+            n_resp_empty=m.n_resp_empty
+            + (done_flat & (jnp.repeat(qlen_after, W) == 0)).sum(),
+            lost_down_resp=m.lost_down_resp
+            + jnp.where(down, done_flat.sum(), 0))
+        rrank = jnp.cumsum(done_flat) - done_flat.astype(jnp.int32)
+        clipped = done_flat & (rrank >= K)
+        m = m._replace(n_resp_clipped=m.n_resp_clipped + clipped.sum())
+        krow = jnp.where(done_flat & ~clipped, rrank, jnp.int32(K))
+        resp_payload = jnp.concatenate([                 # (S·W, WF + 2)
+            meta_flat,
+            jnp.repeat(srv_ids, W).astype(jnp.float32)[:, None],
+            jnp.repeat(qlen_after, W).astype(jnp.float32)[:, None]], axis=1)
+        resp = jnp.zeros((K, WF + 2), jnp.float32).at[krow].set(
+            resp_payload, mode="drop")
+        n_done = jnp.minimum(done_flat.sum(), K)
+        resp_active = (jnp.arange(K) < n_done) & ~down
+        resp_rid = resp[:, WF_RID].astype(jnp.int32)
+        resp_clo = resp[:, WF_CLO].astype(jnp.int32)
+        resp_idx = resp[:, WF_IDX].astype(jnp.int32)
+        resp_client = resp[:, WF_CLIENT].astype(jnp.int32)
+        resp_tarr = resp[:, WF_TARR]
+        resp_sid = resp[:, WF].astype(jnp.int32)
+        resp_qlen = resp[:, WF + 1].astype(jnp.int32)
+
+        # -- switch response path ---------------------------------------
+        switch, drop = _filter_responses(
+            cfg, switch, resp_rid, resp_idx, resp_clo, resp_sid, resp_qlen,
+            resp_active)
+        m = m._replace(n_filtered=m.n_filtered + (drop & resp_active).sum())
+
+        # -- clients ------------------------------------------------------
+        deliver = resp_active & ~drop
+        dedup, redundant, evicted = dedup_tick(dedup, resp_rid, deliver)
+        first = deliver & ~redundant
+        m = m._replace(n_redundant=m.n_redundant + redundant.sum(),
+                       n_dedup_evicted=m.n_dedup_evicted + evicted,
+                       n_completed=m.n_completed + first.sum())
+        # receiver threads: FCFS backlog with per-response RX cost
+        cli_onehot = (resp_client[None, :] == jnp.arange(C)[:, None]) \
+            & deliver[None, :]                           # (C, K)
+        pos = jnp.take_along_axis(_rank_among_earlier(cli_onehot),
+                                  resp_client[None, :], axis=0)[0]
+        backlog_pre = jnp.maximum(state.client_backlog - dt, 0.0)
+        wait = backlog_pre[resp_client] + (pos + 1) * cfg.client_rx_us
+        backlog = backlog_pre + cli_onehot.sum(axis=1) * cfg.client_rx_us
+        t_fin = t_us + wait
+        lat = t_fin - resp_tarr + const_lat
+        rec = first & (t_fin >= t0_us) & (t_fin <= t1_us)
+        bins = jnp.clip((jnp.log(jnp.maximum(lat, cfg.hist_lo_us)
+                                 / cfg.hist_lo_us) / log_g),
+                        0, cfg.hist_bins - 1).astype(jnp.int32)
+        bins = jnp.where(rec, bins, cfg.hist_bins)
+        m = m._replace(hist=m.hist.at[bins].add(1, mode="drop"),
+                       n_completed_win=m.n_completed_win + rec.sum())
+
+        return FleetState(switch=switch, dedup=dedup, queues=queues,
+                          workers=workers, client_backlog=backlog,
+                          key=key, metrics=m), None
+
+    return step
+
+
+def _filter_responses(cfg, switch, rid, idx, clo, sid, qlen, active):
+    """Response path: StateT/ShadowT update + fingerprint filter, with the
+    backend chosen at compile time."""
+    if cfg.filter_backend == "vectorized":
+        new_switch, res = filter_tick_vectorized(switch, rid, idx, clo, sid,
+                                                 qlen, active)
+        return new_switch, res.drop
+    # scan / pallas: update server state via a masked scatter, then run the
+    # table update with inactive lanes neutralised (CLO=0 never touches it)
+    sid_m = jnp.where(active, sid, jnp.int32(switch.server_state.shape[0]))
+    server_state = switch.server_state.at[sid_m].set(
+        qlen.astype(jnp.int32), mode="drop")
+    clo_m = jnp.where(active, clo, 0).astype(jnp.int32)
+    if cfg.filter_backend == "scan":
+        tables, drop = jax.lax.scan(
+            _filter_step, switch.filter_tables,
+            (rid.astype(jnp.int32), idx.astype(jnp.int32), clo_m))
+    else:  # pallas — the VMEM-resident fingerprint kernel
+        from repro.kernels.ops import fingerprint_filter
+
+        tables, drop = fingerprint_filter(
+            switch.filter_tables, rid.astype(jnp.int32),
+            idx.astype(jnp.int32), clo_m)
+    return switch._replace(server_state=server_state,
+                           filter_tables=tables), drop
+
+
+# ------------------------------------------------------------------ runner --
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def simulate(cfg: FleetConfig, params: RunParams) -> Metrics:
+    """Run one cluster for ``cfg.n_ticks`` ticks; fully jitted."""
+    gp = group_pairs_array(cfg.n_servers)
+    k_pois, k0 = jax.random.split(jax.random.PRNGKey(params.seed))
+    state = init_fleet_state(cfg, k0)
+    step = _make_step(cfg, params, gp)
+    ticks = jnp.arange(cfg.n_ticks, dtype=jnp.int32)
+    # per-tick Poisson arrival counts, drawn once outside the scan
+    n_raw = jax.random.poisson(
+        k_pois, params.rate_per_us * cfg.dt_us, (cfg.n_ticks,)
+    ).astype(jnp.int32)
+    state, _ = jax.lax.scan(step, state, (ticks, n_raw))
+    return state.metrics
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def simulate_batch(cfg: FleetConfig, params: RunParams) -> Metrics:
+    """vmapped :func:`simulate` — ``params`` fields carry a leading sweep
+    axis; one device program advances every configuration in lock-step."""
+    return jax.vmap(lambda p: simulate(cfg, p))(params)

@@ -1,0 +1,108 @@
+"""Host-side reduction of device metrics to per-configuration results.
+
+Latency statistics come from the log-spaced histogram the device accumulates
+(geometric bin midpoints, ≈``hist_growth``-relative resolution), so percentile
+error is bounded by the bin width — documented in ``validate.py``'s
+cross-validation tolerances.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.fleetsim.config import FleetConfig
+
+
+@dataclass
+class FleetResult:
+    """One (policy, load, seed) cell of a sweep — mirrors ``SimResult``."""
+
+    policy: str
+    offered_load: float
+    offered_rate_mrps: float
+    seed: int
+    throughput_mrps: float
+    mean_us: float
+    p50_us: float
+    p99_us: float
+    p999_us: float
+    n_arrivals: int
+    n_completed: int
+    n_cloned: int
+    n_clone_drops: int
+    n_filtered: int
+    n_redundant_at_client: int
+    n_overflow: int
+    n_truncated: int
+    n_dropped_down: int        # arrivals lost while the switch was dark
+    n_dedup_evicted: int       # live client fingerprints lost to collisions
+    empty_queue_fraction: float
+
+    @property
+    def clone_fraction(self) -> float:
+        return self.n_cloned / max(self.n_arrivals, 1)
+
+    def row(self) -> dict:
+        return {
+            "policy": self.policy, "load": self.offered_load,
+            "seed": self.seed,
+            "throughput_mrps": round(self.throughput_mrps, 4),
+            "p50_us": round(self.p50_us, 1), "p99_us": round(self.p99_us, 1),
+            "p999_us": round(self.p999_us, 1),
+            "mean_us": round(self.mean_us, 1),
+            "cloned": self.n_cloned, "filtered": self.n_filtered,
+            "clone_drops": self.n_clone_drops,
+            "redundant": self.n_redundant_at_client,
+            "empty_q": round(self.empty_queue_fraction, 3),
+        }
+
+
+def bin_mids_us(cfg: FleetConfig) -> np.ndarray:
+    b = np.arange(cfg.hist_bins)
+    return cfg.hist_lo_us * cfg.hist_growth ** (b + 0.5)
+
+
+def hist_percentile(hist: np.ndarray, mids: np.ndarray, q: float) -> float:
+    total = hist.sum()
+    if total == 0:
+        return float("nan")
+    c = np.cumsum(hist)
+    k = np.searchsorted(c, q / 100.0 * total, side="left")
+    return float(mids[min(k, len(mids) - 1)])
+
+
+def summarize(cfg: FleetConfig, metrics, *, policy: str, load: float,
+              rate_per_us: float, seed: int) -> FleetResult:
+    """Reduce one configuration's device metrics (already indexed out of the
+    sweep batch and moved to host) to a :class:`FleetResult`."""
+    hist = np.asarray(metrics.hist)
+    mids = bin_mids_us(cfg)
+    total = int(hist.sum())
+    mean = float((hist * mids).sum() / total) if total else float("nan")
+    window_us = cfg.duration_us - cfg.warmup_us
+    n_resp = int(metrics.n_resp)
+    return FleetResult(
+        policy=policy,
+        offered_load=load,
+        offered_rate_mrps=float(rate_per_us),
+        seed=seed,
+        throughput_mrps=float(int(metrics.n_completed_win) / window_us),
+        mean_us=mean,
+        p50_us=hist_percentile(hist, mids, 50.0),
+        p99_us=hist_percentile(hist, mids, 99.0),
+        p999_us=hist_percentile(hist, mids, 99.9),
+        n_arrivals=int(metrics.n_arrivals),
+        n_completed=int(metrics.n_completed),
+        n_cloned=int(metrics.n_cloned),
+        n_clone_drops=int(metrics.n_clone_drops),
+        n_filtered=int(metrics.n_filtered),
+        n_redundant_at_client=int(metrics.n_redundant),
+        n_overflow=int(metrics.n_overflow),
+        n_truncated=int(metrics.n_truncated),
+        n_dropped_down=int(metrics.n_dropped_down),
+        n_dedup_evicted=int(metrics.n_dedup_evicted),
+        empty_queue_fraction=(int(metrics.n_resp_empty) / n_resp
+                              if n_resp else 1.0),
+    )

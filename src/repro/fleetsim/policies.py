@@ -1,0 +1,133 @@
+"""Array-form routing policies for one tick of arrival lanes.
+
+Each branch answers, for a batch of ``A`` arrival lanes at once, the same two
+questions a :class:`repro.core.policies.SwitchPolicy` answers per packet:
+where do the copies go, and with what CLO marking.  The NetClone branch is the
+``switch_jax.dispatch_tick`` predicate verbatim (pair lookup from GrpT, the
+StateT/ShadowT idle-idle read, requests never writing server state); the
+others are the array transliterations of their DES counterparts.
+
+``route`` multiplexes the branches with ``lax.switch`` on a *traced* policy
+id, which is what lets one jitted program sweep every policy: under ``vmap``
+each sweep lane takes its own branch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.header import CLO_CLONE, CLO_NONE, CLO_ORIG
+from repro.fleetsim.config import (
+    POLICY_BASELINE,
+    POLICY_CCLONE,
+    POLICY_NCRS,
+    POLICY_NETCLONE,
+    POLICY_RACKSCHED,
+)
+
+
+def _no_clone(dst, a):
+    zero = jnp.zeros(a, jnp.int32)
+    return dst, dst, jnp.zeros(a, bool), zero + CLO_NONE, zero + CLO_NONE
+
+
+def _route_baseline(server_state, pair, r1, r2):
+    # uniform random single copy
+    return _no_clone(r1, r1.shape[0])
+
+
+def _route_cclone(server_state, pair, r1, r2):
+    # two copies to distinct random servers, both ordinary (CLO_NONE):
+    # servers never drop them and the switch never filters the responses
+    a = r1.shape[0]
+    clo = jnp.full(a, CLO_NONE, jnp.int32)
+    return r1, r2, jnp.ones(a, bool), clo, clo
+
+
+def _route_netclone(server_state, pair, r1, r2):
+    # dispatch_tick's predicate: clone iff the candidate pair is tracked-idle
+    s1, s2 = pair[:, 0], pair[:, 1]
+    idle1 = server_state[s1] == 0            # StateT read
+    idle2 = server_state[s2] == 0            # ShadowT read (same values)
+    cloned = idle1 & idle2
+    clo1 = jnp.where(cloned, CLO_ORIG, CLO_NONE).astype(jnp.int32)
+    clo2 = jnp.full(s1.shape[0], CLO_CLONE, jnp.int32)
+    return s1, s2, cloned, clo1, clo2
+
+
+def _route_racksched(server_state, pair, r1, r2):
+    # power-of-two-choices JSQ on piggybacked queue lengths
+    jsq = jnp.where(server_state[r1] <= server_state[r2], r1, r2)
+    return _no_clone(jsq, r1.shape[0])
+
+
+def _route_ncrs(server_state, pair, r1, r2):
+    # §3.7 integration: idle-idle pair → clone; otherwise JSQ between the
+    # candidates instead of blindly Srv1
+    s1, s2 = pair[:, 0], pair[:, 1]
+    cloned = (server_state[s1] == 0) & (server_state[s2] == 0)
+    jsq = jnp.where(server_state[s1] <= server_state[s2], s1, s2)
+    dst1 = jnp.where(cloned, s1, jsq)
+    clo1 = jnp.where(cloned, CLO_ORIG, CLO_NONE).astype(jnp.int32)
+    clo2 = jnp.full(s1.shape[0], CLO_CLONE, jnp.int32)
+    return dst1, s2, cloned, clo1, clo2
+
+
+_BRANCHES = {
+    POLICY_BASELINE: _route_baseline,
+    POLICY_CCLONE: _route_cclone,
+    POLICY_NETCLONE: _route_netclone,
+    POLICY_RACKSCHED: _route_racksched,
+    POLICY_NCRS: _route_ncrs,
+}
+
+
+def route(policy_id: jax.Array, server_state: jax.Array,
+          group_pairs: jax.Array, grp: jax.Array, r1: jax.Array,
+          r2: jax.Array):
+    """Route a tick of arrival lanes under the (traced) policy id.
+
+    ``r1``/``r2`` are pre-drawn distinct uniform server candidates; ``grp``
+    indexes GrpT for the pair-based policies.  Returns
+    ``(dst1, dst2, cloned, clo1, clo2)`` arrays of shape (A,).
+    """
+    pair = group_pairs[grp]
+    branches = [_BRANCHES[i] for i in sorted(_BRANCHES)]
+    return jax.lax.switch(policy_id, branches, server_state, pair, r1, r2)
+
+
+def dedup_tick(table: jax.Array, req_id: jax.Array,
+               active: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Client-side first-response tracking, fingerprint-table style.
+
+    The first response of a request inserts its id; the second finds it,
+    clears the slot, and is flagged *redundant* (it still burns receiver
+    time — that is Fig. 15's point — but completes no request).  Both copies
+    landing in one tick resolve in lane order, like the switch filter (the
+    same parked/parity replay as ``filter_tick_vectorized``).  Returns
+    ``(table, redundant, evicted)`` where ``evicted`` counts live foreign
+    fingerprints overwritten on slot collision — each eviction can later
+    double-count the evicted request's second response as a completion, so
+    the engine surfaces it as a metric.
+    """
+    req_id = req_id.astype(jnp.int32)
+    n_slots = table.shape[0]
+    # same multiplicative hash family as the switch filter
+    x = (req_id.astype(jnp.uint32) * jnp.uint32(2654435761)) >> jnp.uint32(15)
+    slot = (x % jnp.uint32(n_slots)).astype(jnp.int32)
+    occupant = table[slot]
+    parked = occupant == req_id
+    lane = jnp.arange(req_id.shape[0])
+    same = active[:, None] & active[None, :] \
+        & (req_id[:, None] == req_id[None, :])
+    k = jnp.sum(same & (lane[None, :] < lane[:, None]), axis=1)
+    n = jnp.sum(same, axis=1)
+    redundant = active & jnp.where(k % 2 == 0, parked, ~parked)
+    parked_final = jnp.where(n % 2 == 0, parked, ~parked)
+    value = jnp.where(parked_final, req_id, jnp.int32(0))
+    slot_m = jnp.where(active, slot, jnp.int32(n_slots))
+    # a first-of-group insert over a different live id evicts that request
+    evicted = (active & (k == 0) & ~parked & (occupant != 0)).sum()
+    table = table.at[slot_m].set(value, mode="drop")
+    return table, redundant, evicted

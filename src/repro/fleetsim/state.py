@@ -1,0 +1,119 @@
+"""Device-resident fleet state: the whole rack as arrays.
+
+One :class:`FleetState` holds everything the DES keeps in Python objects —
+switch soft state (reused verbatim from ``repro.core.switch_jax``), per-server
+FCFS queues and worker pools, client receiver backlogs, and the running
+metrics — so a single ``lax.scan`` step can advance the entire cluster and
+``vmap`` can advance thousands of clusters.
+
+Representation choices are driven by what is cheap inside a jitted scan on
+any backend (no sorts, few scatters):
+
+* each server's FCFS queue is a **ring buffer**: ``head``/``count`` scalars
+  per server plus one stacked ``(S, Q, QF)`` payload array, so enqueue and
+  dequeue are a handful of gathers/scatters at computed offsets and FCFS
+  order is positional — no stamps, no argsort;
+* worker metadata is likewise stacked into one ``(S, W, WF)`` array so a
+  tick writes it with a single scatter.
+
+Integer payload fields (req ids, CLO, …) ride in the float32 payload arrays;
+``FleetConfig`` bounds req ids below 2²⁴ so the round-trip is exact.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.switch_jax import SwitchState, init_switch_state
+from repro.fleetsim.config import FleetConfig
+
+# queue payload fields, (S, Q, QF) — float32, ints exact below 2^24
+QF_BASE = 0     # intrinsic service demand (µs)
+QF_TARR = 1     # switch-arrival time (µs)
+QF_RID = 2      # REQ_ID
+QF_CLO = 3      # CLO marking
+QF_IDX = 4      # filter-table index
+QF_CLIENT = 5   # client id
+QF = 6
+
+# worker payload fields, (S, W, WF).  A worker is busy iff REM > 0, so one
+# stacked array (and one scatter per tick) carries the whole pool.
+WF_REM = 0      # remaining execution time (µs); 0 ⇔ idle
+WF_TARR = 1
+WF_RID = 2
+WF_CLO = 3
+WF_IDX = 4
+WF_CLIENT = 5
+WF = 6
+
+
+class RingQueues(NamedTuple):
+    """Per-server FCFS ring buffers."""
+
+    head: jax.Array     # (S,) int32 — oldest occupied slot
+    count: jax.Array    # (S,) int32 — waiting requests
+    data: jax.Array     # (S, Q, QF) float32 payload
+
+
+class Workers(NamedTuple):
+    meta: jax.Array     # (S, W, WF) float32 payload; busy ⇔ REM > 0
+
+
+class Metrics(NamedTuple):
+    """Running counters + the log-spaced latency histogram."""
+
+    hist: jax.Array             # (hist_bins,) int32 — in-window latencies
+    n_arrivals: jax.Array       # requests admitted at the switch
+    n_truncated: jax.Array      # Poisson arrivals clipped by lane headroom
+    n_dropped_down: jax.Array   # arrivals lost while the switch was dark
+    n_cloned: jax.Array
+    n_clone_drops: jax.Array    # server-side CLO=2 stale-state drops
+    n_filtered: jax.Array       # redundant responses dropped at the switch
+    n_redundant: jax.Array      # redundant responses absorbed at clients
+    n_overflow: jax.Array       # queue-slot exhaustion drops
+    n_dedup_evicted: jax.Array  # live client fingerprints lost to collisions
+    n_resp_clipped: jax.Array   # completions beyond the response-lane budget
+    n_completed: jax.Array      # first responses delivered (whole run)
+    n_completed_win: jax.Array  # … finishing inside the measurement window
+    n_resp: jax.Array           # all server completions
+    n_resp_empty: jax.Array     # … that piggybacked qlen == 0
+    lost_down_resp: jax.Array   # responses lost while the switch was dark
+
+
+class FleetState(NamedTuple):
+    switch: SwitchState         # seq / server_state / filter_tables
+    dedup: jax.Array            # (n_dedup_slots,) int32 client fingerprints
+    queues: RingQueues
+    workers: Workers
+    client_backlog: jax.Array   # (C,) f32 — receiver-thread work backlog (µs)
+    key: jax.Array              # PRNG carry
+    metrics: Metrics
+
+
+def init_metrics(cfg: FleetConfig) -> Metrics:
+    z = jnp.zeros((), jnp.int32)
+    return Metrics(hist=jnp.zeros((cfg.hist_bins,), jnp.int32),
+                   n_arrivals=z, n_truncated=z, n_dropped_down=z,
+                   n_cloned=z, n_clone_drops=z, n_filtered=z, n_redundant=z,
+                   n_overflow=z, n_dedup_evicted=z, n_resp_clipped=z,
+                   n_completed=z,
+                   n_completed_win=z, n_resp=z, n_resp_empty=z,
+                   lost_down_resp=z)
+
+
+def init_fleet_state(cfg: FleetConfig, key: jax.Array) -> FleetState:
+    s, q, w = cfg.n_servers, cfg.queue_cap, cfg.n_workers
+    return FleetState(
+        switch=init_switch_state(s, cfg.n_filter_tables, cfg.n_filter_slots),
+        dedup=jnp.zeros((cfg.n_dedup_slots,), jnp.int32),
+        queues=RingQueues(head=jnp.zeros((s,), jnp.int32),
+                          count=jnp.zeros((s,), jnp.int32),
+                          data=jnp.zeros((s, q, QF), jnp.float32)),
+        workers=Workers(meta=jnp.zeros((s, w, WF), jnp.float32)),
+        client_backlog=jnp.zeros((cfg.n_clients,), jnp.float32),
+        key=key,
+        metrics=init_metrics(cfg),
+    )

@@ -1,0 +1,97 @@
+"""Dedicated coverage for the delayed-hedging policy (core/hedging.py).
+
+Three contract points from the Tail-at-Scale framing:
+
+* the hedge duplicate fires only after ``delay_us`` of outstanding time;
+* redundant responses of hedged pairs are filtered (and counted) at the
+  switch vantage point exactly like NetClone's;
+* hedging is *surgical*: its clone overhead is bounded by the straggler
+  fraction (requests still outstanding at the delay), unlike C-Clone's 100%.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.header import CLO_CLONE, CLO_ORIG, Request, Response
+from repro.core.hedging import HedgePolicy
+from repro.core.simulator import Simulator
+from repro.core.workloads import ExponentialService
+
+
+# ------------------------------------------------------------- unit level ---
+def test_hedge_fires_only_after_delay():
+    pol = HedgePolicy(4, delay_us=75.0)
+    req = Request(grp=0)
+    [(pkt, _)] = pol.route(req, np.random.default_rng(0))
+    assert pkt.clo == CLO_ORIG          # responses must hit the filter
+    pol.arm(pkt.req_id, now=10.0)       # armed at t=10 → due at t=85
+    assert pol.due_hedges(now=84.9) == []
+    fired = pol.due_hedges(now=85.1)
+    assert len(fired) == 1
+    clone = fired[0]
+    assert clone.clo == CLO_CLONE and clone.req_id == pkt.req_id
+    assert pol.n_cloned == 1
+    # one-shot: the timer is disarmed after firing
+    assert pol.due_hedges(now=1000.0) == []
+
+
+def test_first_response_cancels_pending_hedge():
+    pol = HedgePolicy(4, delay_us=75.0)
+    [(pkt, _)] = pol.route(Request(grp=0), np.random.default_rng(0))
+    pol.arm(pkt.req_id, now=0.0)
+    drop = pol.on_response(Response(req_id=pkt.req_id, sid=pkt.dst,
+                                    clo=pkt.clo, idx=pkt.idx))
+    assert drop is False                # first response always forwarded
+    assert pol.due_hedges(now=1e9) == []
+    assert pol.n_cloned == 0
+
+
+def test_redundant_hedge_response_is_filtered_and_counted():
+    pol = HedgePolicy(4, delay_us=75.0)
+    [(pkt, _)] = pol.route(Request(grp=0), np.random.default_rng(0))
+    pol.arm(pkt.req_id, now=0.0)
+    [clone] = pol.due_hedges(now=80.0)
+    r1 = Response(req_id=pkt.req_id, sid=pkt.dst, clo=pkt.clo, idx=pkt.idx)
+    r2 = Response(req_id=clone.req_id, sid=clone.dst, clo=clone.clo,
+                  idx=clone.idx)
+    assert pol.on_response(r1) is False
+    assert pol.on_response(r2) is True  # slower copy dropped at the switch
+    assert pol.filter_tables.n_filtered == 1
+
+
+def test_fail_wipes_outstanding_timers():
+    pol = HedgePolicy(4, delay_us=75.0)
+    [(pkt, _)] = pol.route(Request(grp=0), np.random.default_rng(0))
+    pol.arm(pkt.req_id, now=0.0)
+    pol.fail()
+    assert pol.due_hedges(now=1e9) == []
+    assert not pol.filter_tables.tables.any()
+
+
+# ------------------------------------------------------------- system level --
+def test_hedge_overhead_bounded_by_straggler_fraction():
+    """Hedges fire for requests whose first response is still outstanding at
+    ``delay_us``; the hedge rate is therefore bounded by the fraction of
+    requests slower than the delay (measured on the same run)."""
+    svc = ExponentialService(25.0)
+    delay = 75.0
+    sim = Simulator("hedge", svc, n_servers=4, n_workers=8, seed=0,
+                    delay_us=delay)
+    r = sim.run(offered_load=0.4, n_requests=8000)
+    assert r.n_completed == r.n_requests
+    straggler_frac = float((r.latencies_us > delay).mean())
+    hedge_frac = r.n_cloned / r.n_requests
+    assert 0 < hedge_frac <= straggler_frac + 0.02
+    # redundant copies were filtered at the switch, not billed to clients
+    assert r.n_filtered > 0
+    assert r.n_redundant_at_client <= r.n_cloned
+
+
+def test_hedge_counts_balance():
+    svc = ExponentialService(25.0)
+    r = Simulator("hedge", svc, n_servers=4, n_workers=8, seed=2,
+                  delay_us=75.0).run(offered_load=0.5, n_requests=6000)
+    # every hedge clone either raced (filtered / redundant at client) or was
+    # dropped by the server-side CLO=2 rule
+    assert r.n_filtered + r.n_clone_drops + r.n_redundant_at_client \
+        == r.n_cloned

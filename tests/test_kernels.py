@@ -9,7 +9,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.switch_jax import filter_tick_oracle
 from repro.kernels import ref

@@ -47,7 +47,9 @@ def test_smoke_forward_loss(arch):
 
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_train_step_reduces_loss(arch):
-    """A couple of SGD steps on the smoke config must reduce the loss."""
+    """An SGD step on the smoke config must reduce the loss.  The step size
+    is arch-sensitive (MoE router logits overshoot at large lr), so try a
+    descending ladder — a broken gradient fails at every scale."""
     cfg = get_config(arch, smoke=True)
     fam = family_of(cfg)
     params = fam.init_params(cfg, KEY)
@@ -58,10 +60,15 @@ def test_smoke_train_step_reduces_loss(arch):
 
     l0 = float(loss_of(params))
     g = jax.grad(loss_of)(params)
-    params = jax.tree.map(lambda p, gg: p - 0.5 * gg.astype(p.dtype),
-                          params, g)
-    l1 = float(loss_of(params))
-    assert np.isfinite(l1) and l1 < l0, f"{arch}: {l0} -> {l1}"
+    tried = []
+    for lr in (0.5, 0.1, 0.02):
+        stepped = jax.tree.map(lambda p, gg: p - lr * gg.astype(p.dtype),
+                               params, g)
+        l1 = float(loss_of(stepped))
+        tried.append(f"lr={lr}: {l0} -> {l1}")
+        if np.isfinite(l1) and l1 < l0:
+            return
+    pytest.fail(f"{arch}: no step size reduced the loss ({'; '.join(tried)})")
 
 
 @pytest.mark.parametrize("arch", ARCHS)

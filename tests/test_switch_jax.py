@@ -2,7 +2,7 @@
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import switch_jax as sw
 from repro.core.header import CLO_CLONE, CLO_NONE, CLO_ORIG, Request, Response
@@ -96,3 +96,121 @@ def test_wipe_matches_switch_failure():
     state = sw.wipe(state)
     assert int(state.seq) == 0
     assert not np.asarray(state.filter_tables).any()
+
+
+def test_wipe_failover_mid_stream():
+    """§3.6 failover: after a mid-stream wipe, dispatch resumes with fresh
+    REQ_IDs from 1 and the wiped filter tables never drop the *first*
+    response of a post-wipe request, even when it reuses a pre-wipe id."""
+    n, n_slots = 4, 64
+    state = sw.init_switch_state(n, 2, n_slots)
+    gp = sw.group_pairs_array(n)
+    # pre-wipe stream: dispatch a batch and let only the FAST copies respond,
+    # leaving fingerprints parked in the tables
+    grp = jnp.asarray([0, 1, 2, 3, 4, 5], jnp.int32)
+    state, res = sw.dispatch_tick(state, gp, grp)
+    rid = res.req_id
+    idx = jnp.zeros(6, jnp.int32)
+    clo = jnp.full(6, CLO_ORIG, jnp.int32)
+    state, fres = sw.filter_tick(state, rid, idx, clo, res.dst1,
+                                 jnp.zeros(6, jnp.int32))
+    assert not bool(fres.drop.any())
+    assert np.asarray(state.filter_tables).any()   # fingerprints parked
+
+    state = sw.wipe(state)
+
+    # dispatch resumes with fresh ids: same ids as the pre-wipe batch
+    state2, res2 = sw.dispatch_tick(state, gp, grp)
+    assert np.array_equal(np.asarray(res2.req_id), np.asarray(rid))
+    assert int(res2.req_id[0]) == 1
+    # the post-wipe requests' FIRST responses must pass the filter — the
+    # pre-wipe fingerprints with identical ids are gone
+    state2, fres2 = sw.filter_tick(state2, res2.req_id, idx, clo, res2.dst1,
+                                   jnp.zeros(6, jnp.int32))
+    assert not bool(fres2.drop.any())
+    # and the slower copies are still dropped exactly once
+    state2, fres3 = sw.filter_tick(state2, res2.req_id, idx,
+                                   jnp.full(6, CLO_CLONE, jnp.int32),
+                                   res2.dst2, jnp.zeros(6, jnp.int32))
+    assert bool(fres3.drop.all())
+
+
+def test_wipe_failover_matches_oracle():
+    """The wiped-table response stream agrees with filter_tick_oracle run on
+    zeroed tables (the oracle of a fresh switch)."""
+    rng = np.random.default_rng(3)
+    n, n_slots = 4, 32
+    state = sw.init_switch_state(n, 2, n_slots)
+    gp = sw.group_pairs_array(n)
+    # park garbage soft state, then fail
+    state, _ = sw.dispatch_tick(state, gp, jnp.asarray([0, 1, 2], jnp.int32))
+    state, _ = sw.filter_tick(
+        state, jnp.asarray([1, 2, 3], jnp.int32), jnp.zeros(3, jnp.int32),
+        jnp.ones(3, jnp.int32), jnp.asarray([0, 1, 2], jnp.int32),
+        jnp.asarray([2, 1, 3], jnp.int32))
+    state = sw.wipe(state)
+
+    batch = 40
+    rid = rng.integers(1, 20, batch)
+    idx = rng.integers(0, 2, batch)
+    clo = rng.integers(0, 3, batch)
+    sid = rng.integers(0, n, batch)
+    qlen = rng.integers(0, 4, batch)
+    new_state, res = sw.filter_tick(
+        state, jnp.asarray(rid, jnp.int32), jnp.asarray(idx, jnp.int32),
+        jnp.asarray(clo, jnp.int32), jnp.asarray(sid, jnp.int32),
+        jnp.asarray(qlen, jnp.int32))
+    wt, ws, wd = sw.filter_tick_oracle(
+        np.zeros((2, n_slots), np.int64), np.zeros(n, np.int64),
+        rid, idx, clo, sid, qlen)
+    assert np.array_equal(np.asarray(res.drop), wd)
+    assert np.array_equal(np.asarray(new_state.filter_tables),
+                          wt.astype(np.int32))
+
+
+@given(seed=st.integers(0, 500), batch=st.integers(1, 40))
+@settings(max_examples=25, deadline=None)
+def test_filter_tick_vectorized_matches_oracle(seed, batch):
+    """The one-scatter fleet filter matches the sequential oracle whenever
+    lanes hit distinct slots or are same-request pairs — the cases a tick
+    produces (see its docstring for the one documented divergence)."""
+    rng = np.random.default_rng(seed)
+    n_servers, n_slots = 4, 64
+    state = sw.init_switch_state(n_servers, 2, n_slots)
+    # occupy some slots first so hits occur
+    pre_rid = rng.integers(1, 40, 10)
+    pre_idx = rng.integers(0, 2, 10)
+    state, _ = sw.filter_tick(
+        state, jnp.asarray(pre_rid, jnp.int32), jnp.asarray(pre_idx, jnp.int32),
+        jnp.ones(10, jnp.int32), jnp.zeros(10, jnp.int32),
+        jnp.zeros(10, jnp.int32))
+    # a tick whose lanes either repeat one req id (a clone pair completing
+    # together) or are slot-distinct
+    rid = rng.integers(1, 40, batch)
+    if batch >= 2 and rng.random() < 0.5:
+        rid[batch // 2] = rid[0]        # same-tick clone pair
+    idx = rng.integers(0, 2, batch)
+    # drop lanes whose (table, slot) collides with a *different* id in the
+    # same tick — the one documented divergence of the vectorized filter
+    seen, keep = {}, []
+    for k in range(batch):
+        key = (int(idx[k]),
+               int(sw.fingerprint_hash_jax(jnp.int32(int(rid[k])), n_slots)))
+        keep.append(seen.get(key, rid[k]) == rid[k])
+        seen.setdefault(key, rid[k])
+    keep = np.asarray(keep)
+    rid, idx = rid[keep], idx[keep]
+    batch = len(rid)
+    if batch == 0:
+        return
+    clo = rng.integers(0, 3, batch)
+    sid = rng.integers(0, n_servers, batch)
+    qlen = rng.integers(0, 4, batch)
+    args = [jnp.asarray(a, jnp.int32) for a in (rid, idx, clo, sid, qlen)]
+    sv, rv = sw.filter_tick_vectorized(state, *args)
+    ss, rs = sw.filter_tick(state, *args)
+    assert np.array_equal(np.asarray(rv.drop), np.asarray(rs.drop))
+    assert np.array_equal(np.asarray(sv.filter_tables),
+                          np.asarray(ss.filter_tables))
+    assert np.array_equal(np.asarray(sv.server_state),
+                          np.asarray(ss.server_state))
