@@ -72,7 +72,8 @@ def fig7_synthetic():
     claims.append(("C2b", "Bimodal avg p99 improvement ≈1.27x (>=1.1x)",
                    imp_bi >= 1.1, f"{imp_bi:.2f}x"))
     # C1: C-Clone throughput collapses; NetClone tracks baseline
-    thr = lambda rs: max(r.throughput_mrps for r in rs)
+    def thr(rs):
+        return max(r.throughput_mrps for r in rs)
     tb, tc, tn = (thr(out[("exp25", p)]) for p in
                   ("baseline", "c-clone", "netclone"))
     claims.append(("C1a", "C-Clone max throughput <= 0.65x baseline",

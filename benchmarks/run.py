@@ -6,12 +6,17 @@ results/dryrun) the roofline table.
 
     PYTHONPATH=src python -m benchmarks.run [figures...]
     PYTHONPATH=src python -m benchmarks.run --engine fleetsim
+    PYTHONPATH=src python -m benchmarks.run --engine fleetsim --racks 4 \
+        --hot-rack-weight 3.0 --straggler-mult 2.0
     REPRO_BENCH_FAST=1  → reduced request counts (CI)
 
 ``--engine fleetsim`` runs the policy × load × seed grid through the jitted,
 vmapped FleetSim (one device program for the whole grid) and writes
 ``results/bench/BENCH_fleetsim.json`` with wall-clock + simulated-MRPS
-numbers and the DES cross-validation scoreboard.
+numbers, per-rack tail latencies, and the DES cross-validation scoreboard.
+``--racks N`` sweeps the 2-tier fabric (spine + N rack switches);
+``--hot-rack-weight`` / ``--straggler-mult`` inject rack skew.  Unknown
+figure names and ``--engine`` values are hard argparse errors.
 """
 
 from __future__ import annotations
@@ -70,13 +75,14 @@ def _microbenches() -> list[str]:
 
 
 def run_fleetsim(args) -> None:
-    """One jitted sweep over the full policy × load × seed grid, plus the
-    DES cross-validation scoreboard on a subset of overlapping points."""
+    """One jitted sweep over the full policy × load × seed grid (optionally
+    a multi-rack fabric with hot-rack / straggler-rack skew), plus the DES
+    cross-validation scoreboard on a subset of overlapping points."""
     import os
 
     from repro.core.workloads import ExponentialService
     from repro.fleetsim import FleetConfig, ServiceSpec
-    from repro.fleetsim.sweep import sweep_grid
+    from repro.fleetsim.sweep import rack_skew, sweep_grid
     from repro.fleetsim.validate import cross_validate
 
     fast = bool(int(os.environ.get("REPRO_BENCH_FAST", "0")))
@@ -85,15 +91,20 @@ def run_fleetsim(args) -> None:
     loads = [0.1, 0.2, 0.35, 0.5, 0.65, 0.8, 0.9, 0.95][:args.loads]
     seeds = list(range(args.seeds))
     svc = ExponentialService(25.0)
-    cfg = FleetConfig(n_servers=args.servers, n_workers=args.workers,
+    cfg = FleetConfig(n_racks=args.racks, n_servers=args.servers,
+                      n_workers=args.workers,
                       n_ticks=min(args.ticks, 10_000) if fast else args.ticks,
                       service=ServiceSpec.from_process(svc))
+    weights, slowdown = rack_skew(cfg, hot_rack_weight=args.hot_rack_weight,
+                                  straggler_rack_mult=args.straggler_mult)
 
     n_cfg = len(policies) * len(loads) * len(seeds)
     print(f"== fleetsim sweep: {len(policies)} policies x {len(loads)} loads "
           f"x {len(seeds)} seeds = {n_cfg} configurations, "
+          f"{args.racks} rack(s) x {args.servers} servers, "
           f"{cfg.n_ticks} ticks each ==")
-    sw = sweep_grid(svc, policies, loads, seeds, cfg=cfg)
+    sw = sweep_grid(svc, policies, loads, seeds, cfg=cfg,
+                    rack_weights=weights, slowdown=slowdown)
     print(f"compile {sw.compile_s:.1f}s  run {sw.wall_clock_s:.1f}s  "
           f"{sw.simulated_requests/1e6:.1f}M simulated requests  "
           f"{sw.simulated_mrps:.2f} MRPS-simulated")
@@ -106,8 +117,11 @@ def run_fleetsim(args) -> None:
 
     checks = []
     if not args.no_validate:
-        print("\n== DES cross-validation (documented tolerances in "
-              "repro/fleetsim/validate.py) ==")
+        # the DES is single-ToR, so this cross-validates the fabric's
+        # n_racks=1 path — which is bit-identical to the per-rack machinery
+        # every rack of a multi-rack sweep runs (tests/test_fleetsim_fabric)
+        print("\n== DES cross-validation, single-rack path (documented "
+              "tolerances in repro/fleetsim/validate.py) ==")
         checks = cross_validate(
             svc, ["baseline", "netclone", "c-clone"], [0.2, 0.5, 0.8],
             n_servers=args.servers, n_workers=args.workers,
@@ -120,6 +134,10 @@ def run_fleetsim(args) -> None:
     outdir.mkdir(parents=True, exist_ok=True)
     payload = {
         "engine": "fleetsim",
+        "n_racks": cfg.n_racks,
+        "n_servers_per_rack": cfg.n_servers,
+        "rack_weights": [float(w) for w in weights],
+        "straggler_rack_mult": args.straggler_mult,
         "n_configs": sw.n_configs,
         "n_ticks": cfg.n_ticks,
         "wall_clock_s": round(sw.wall_clock_s, 3),
@@ -147,8 +165,15 @@ def main() -> None:
                     help="number of load points (fleetsim)")
     ap.add_argument("--seeds", type=int, default=5,
                     help="seeds per (policy, load) cell (fleetsim)")
-    ap.add_argument("--servers", type=int, default=6)
+    ap.add_argument("--racks", type=int, default=1,
+                    help="fabric racks (fleetsim; >1 adds the spine tier)")
+    ap.add_argument("--servers", type=int, default=6,
+                    help="servers per rack (fleetsim)")
     ap.add_argument("--workers", type=int, default=15)
+    ap.add_argument("--hot-rack-weight", type=float, default=1.0,
+                    help="arrival-weight multiplier for rack 0 (fleetsim)")
+    ap.add_argument("--straggler-mult", type=float, default=1.0,
+                    help="execution slowdown for the last rack (fleetsim)")
     ap.add_argument("--no-validate", action="store_true",
                     help="skip the DES cross-validation pass")
     args = ap.parse_args()
@@ -160,6 +185,9 @@ def main() -> None:
     from benchmarks.figures import ALL_FIGURES
 
     wanted = args.figures or list(ALL_FIGURES)
+    unknown = [n for n in wanted if n not in ALL_FIGURES]
+    if unknown:
+        ap.error(f"unknown figure(s) {unknown}; have {list(ALL_FIGURES)}")
     outdir = Path("results/bench")
     outdir.mkdir(parents=True, exist_ok=True)
 
@@ -169,9 +197,6 @@ def main() -> None:
 
     all_rows, all_claims = [], []
     for name in wanted:
-        if name not in ALL_FIGURES:
-            print(f"unknown figure {name}; have {list(ALL_FIGURES)}")
-            continue
         t0 = time.time()
         rows, claims = ALL_FIGURES[name]()
         all_rows += rows

@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.core.workloads import ExponentialService
 from repro.fleetsim import FleetConfig, ServiceSpec
-from repro.fleetsim.sweep import sweep_grid
+from repro.fleetsim.sweep import rack_skew, sweep_grid
 
 svc = ExponentialService(25.0)   # Exp(25 µs) RPCs, p=0.01 jitter ×15
 cfg = FleetConfig(n_servers=6, n_workers=15, n_ticks=20_000,
@@ -60,5 +60,25 @@ print(f"  admitted={r.n_arrivals}  completed={r.n_completed}  "
       f"dropped-while-dark={r.n_dropped_down}  "
       f"(responses lost / in flight: {r.n_arrivals - r.n_completed})  "
       f"post-recovery p99={r.p99_us:.1f}µs")
+print()
+print("=" * 72)
+print("4. 2-tier fabric: 2 racks, rack 0 hot (6x arrival share, load 0.55)")
+print("=" * 72)
+fcfg = FleetConfig(n_racks=2, n_servers=6, n_workers=15, n_ticks=20_000,
+                   service=ServiceSpec.from_process(svc))
+weights, slowdown = rack_skew(fcfg, hot_rack_weight=6.0)
+sw = sweep_grid(svc, ["baseline", "netclone"], [0.55], [0, 1], cfg=fcfg,
+                rack_weights=weights, slowdown=slowdown)
+for pol in ("baseline", "netclone"):
+    rs = sw.select(policy=pol)
+    p50 = np.mean([r.p50_us for r in rs])
+    p99 = np.mean([r.p99_us for r in rs])
+    xr = np.mean([r.n_interrack_cloned for r in rs])
+    served = np.mean([r.rack_completed[1] / max(sum(r.rack_completed), 1)
+                      for r in rs])
+    print(f"  {pol:20s} p50={p50:6.1f}µs p99={p99:7.1f}µs  "
+          f"inter-rack clones={xr:6.0f}  cool-rack share={served:5.1%}")
+
 print("\ndone — `python -m benchmarks.run --engine fleetsim` runs the full "
-      "200-configuration sweep + DES cross-validation.")
+      "200-configuration sweep + DES cross-validation "
+      "(`--racks N` for the 2-tier fabric).")

@@ -16,7 +16,6 @@ from repro.core.simulator import Simulator
 from repro.core.workloads import ExponentialService
 from repro.data import DataConfig, SyntheticLM
 from repro.launch.mesh import make_host_mesh
-from repro.models import family_of
 from repro.serve import DecodeReplica, NetCloneServer
 from repro.train import OptimizerConfig, make_train_step
 

@@ -29,7 +29,7 @@ import json
 from dataclasses import dataclass
 from pathlib import Path
 
-from repro.configs import SHAPES, get_config, supported_shapes
+from repro.configs import SHAPES, get_config
 from repro.models import family_of
 from repro.models.common import ModelConfig
 

@@ -21,7 +21,6 @@ p99 floor is ``delay + service`` while NetClone's clones race from t=0.
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.header import CLO_CLONE, CLO_NONE, CLO_ORIG, Request
 from repro.core.policies import SwitchPolicy, _clone_of

@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.core.header import CLO_CLONE, CLO_NONE, CLO_ORIG, Request, Response
 from repro.core.switch import NetCloneSwitch, SwitchCosts
-from repro.core.tables import GroupTable, StateTable
+from repro.core.tables import StateTable
 
 #: (packet, extra-switch-delay-µs) pairs emitted by ``route``
 Copy = tuple[Request, float]

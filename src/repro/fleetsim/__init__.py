@@ -1,8 +1,10 @@
 """FleetSim — the fully-jitted, vmapped, device-resident cluster simulator.
 
 Where ``repro.core.simulator`` replays one (policy, load, seed) configuration
-at a time in Python, FleetSim keeps the entire rack — switch soft state,
-per-server FCFS queues and workers, client receiver threads — in JAX arrays,
+at a time in Python, FleetSim keeps the entire 2-tier fabric — per-rack
+switch soft state under a spine tier that places and filters inter-rack
+clones, per-server FCFS queues and workers, client receiver threads — in
+JAX arrays,
 advances it with one ``lax.scan``, and sweeps thousands of configurations in
 a single ``vmap``-ped device program.  The NetClone data-plane semantics are
 shared with ``repro.core.switch_jax`` (the same state layout and filter
@@ -18,8 +20,8 @@ from repro.fleetsim.config import (
 )
 from repro.fleetsim.engine import RunParams, make_params, simulate, simulate_batch
 from repro.fleetsim.metrics import FleetResult, summarize
-from repro.fleetsim.state import FleetState, Metrics, init_fleet_state
-from repro.fleetsim.sweep import SweepResult, sweep_grid
+from repro.fleetsim.state import FabricSwitch, FleetState, Metrics, init_fleet_state
+from repro.fleetsim.sweep import SweepResult, rack_skew, sweep_grid
 from repro.fleetsim.validate import CrossCheck, cross_validate
 
 __all__ = [
@@ -33,10 +35,12 @@ __all__ = [
     "simulate_batch",
     "FleetResult",
     "summarize",
+    "FabricSwitch",
     "FleetState",
     "Metrics",
     "init_fleet_state",
     "SweepResult",
+    "rack_skew",
     "sweep_grid",
     "CrossCheck",
     "cross_validate",

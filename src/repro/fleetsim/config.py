@@ -92,15 +92,27 @@ class ServiceSpec:
 
 @dataclass(frozen=True)
 class FleetConfig:
-    """Shapes + calibrated latency constants of one simulated rack.
+    """Shapes + calibrated latency constants of one simulated fabric.
 
     Latency constants default to the DES's :class:`NetworkCosts` /
     :class:`SwitchCosts` so the two engines are directly comparable.
+
+    ``n_racks == 1`` is the original single-ToR testbed and is guaranteed
+    bit-identical to it (same PRNG draws, same op order — enforced by the
+    golden test in ``tests/test_fleetsim_fabric.py``).  ``n_racks > 1``
+    models a 2-tier fabric: per-rack ToR switches under one spine that
+    assigns fabric-global REQ_IDs, aggregates per-rack load, and hosts the
+    filter table for inter-rack clone pairs (§3.7's multi-switch story).
+    ``n_servers`` is then *per rack*.
     """
 
+    n_racks: int = 1
     n_servers: int = 6
     n_workers: int = 15
-    n_clients: int = 2
+    # client machines (receiver threads); 0 → scale with the fabric
+    # (2 per rack, the DES's 2-clients-per-6-server-rack testbed ratio), so
+    # multi-rack sweeps aren't silently receiver-bound
+    n_clients: int = 0
     # FCFS slots per server.  Ring buffers make capacity nearly free (no
     # per-tick op scales with it), so the default is deep enough that beyond-
     # saturation runs build DES-like unbounded-queue latency instead of
@@ -128,6 +140,9 @@ class FleetConfig:
     client_rx_us: float = 0.68
     client_tx_us: float = 0.15
     pipeline_pass_us: float = 0.4
+    # one-way client↔spine / spine↔rack-switch hop (µs); only paid when the
+    # fabric actually has a spine tier (n_racks > 1)
+    spine_hop_us: float = 0.5
     # response-filter backend: "vectorized" (one scatter/tick, default),
     # "scan" (exact lane-sequential switch_jax.filter semantics), or
     # "pallas" (kernels.fingerprint_filter — the VMEM-resident kernel)
@@ -138,6 +153,12 @@ class FleetConfig:
     hist_growth: float = 1.06
 
     def __post_init__(self):
+        if self.n_racks < 1:
+            raise ValueError("n_racks must be at least 1")
+        if self.n_clients == 0:
+            object.__setattr__(self, "n_clients", 2 * self.n_racks)
+        if self.n_clients < 1:
+            raise ValueError("n_clients must be >= 1 (or 0 to auto-scale)")
         if self.n_filter_slots & (self.n_filter_slots - 1):
             raise ValueError("n_filter_slots must be a power of two")
         if self.n_dedup_slots & (self.n_dedup_slots - 1):
@@ -145,7 +166,7 @@ class FleetConfig:
         if self.filter_backend not in ("vectorized", "scan", "pallas"):
             raise ValueError(f"unknown filter_backend {self.filter_backend!r}")
         if self.n_servers < 2:
-            raise ValueError("fleetsim requires at least two servers")
+            raise ValueError("fleetsim requires at least two servers per rack")
         # req ids ride in float32 payload lanes; keep them exactly
         # representable (REQ_ID ≤ n_ticks × max_arrivals < 2^24)
         if self.n_ticks * self.max_arrivals >= 2 ** 24:
@@ -154,7 +175,29 @@ class FleetConfig:
 
     @property
     def n_groups(self) -> int:
+        """GrpT entries per rack switch (ordered pairs of local servers)."""
         return self.n_servers * (self.n_servers - 1)
+
+    @property
+    def n_servers_total(self) -> int:
+        return self.n_racks * self.n_servers
+
+    @property
+    def spine_extra_us(self) -> float:
+        """Round-trip latency added by the spine tier every request pays
+        under a 2-tier fabric (two extra link hops + two pipeline passes);
+        zero when the fabric is a single ToR."""
+        if self.n_racks == 1:
+            return 0.0
+        return 2.0 * (self.spine_hop_us + self.pipeline_pass_us)
+
+    @property
+    def interrack_extra_us(self) -> float:
+        """Additional one-way detour paid by the remote copy of an
+        inter-rack clone pair (spine → remote rack switch and back up)."""
+        if self.n_racks == 1:
+            return 0.0
+        return 2.0 * (self.spine_hop_us + self.pipeline_pass_us)
 
     @property
     def duration_us(self) -> float:

@@ -17,7 +17,13 @@ from repro.fleetsim.config import FleetConfig
 
 @dataclass
 class FleetResult:
-    """One (policy, load, seed) cell of a sweep — mirrors ``SimResult``."""
+    """One (policy, load, seed) cell of a sweep — mirrors ``SimResult``.
+
+    The scalar latency statistics are fabric-wide; ``rack_*`` tuples break
+    them out per rack (indexed by the rack that served the winning
+    response), so hot-rack / straggler-rack scenarios can be read directly
+    off a sweep row.
+    """
 
     policy: str
     offered_load: float
@@ -31,18 +37,27 @@ class FleetResult:
     n_arrivals: int
     n_completed: int
     n_cloned: int
+    n_interrack_cloned: int    # clones whose copies span racks
     n_clone_drops: int
     n_filtered: int
+    n_spine_filtered: int      # … filtered at the spine (inter-rack pairs)
     n_redundant_at_client: int
     n_overflow: int
     n_truncated: int
     n_dropped_down: int        # arrivals lost while the switch was dark
     n_dedup_evicted: int       # live client fingerprints lost to collisions
     empty_queue_fraction: float
+    rack_completed: tuple[int, ...] = ()       # in-window, by serving rack
+    rack_p50_us: tuple[float, ...] = ()
+    rack_p99_us: tuple[float, ...] = ()
 
     @property
     def clone_fraction(self) -> float:
         return self.n_cloned / max(self.n_arrivals, 1)
+
+    @property
+    def interrack_clone_fraction(self) -> float:
+        return self.n_interrack_cloned / max(self.n_arrivals, 1)
 
     def row(self) -> dict:
         return {
@@ -53,9 +68,14 @@ class FleetResult:
             "p999_us": round(self.p999_us, 1),
             "mean_us": round(self.mean_us, 1),
             "cloned": self.n_cloned, "filtered": self.n_filtered,
+            "interrack": self.n_interrack_cloned,
+            "spine_filtered": self.n_spine_filtered,
             "clone_drops": self.n_clone_drops,
             "redundant": self.n_redundant_at_client,
             "empty_q": round(self.empty_queue_fraction, 3),
+            "rack_completed": list(self.rack_completed),
+            "rack_p50_us": [round(v, 1) for v in self.rack_p50_us],
+            "rack_p99_us": [round(v, 1) for v in self.rack_p99_us],
         }
 
 
@@ -76,8 +96,13 @@ def hist_percentile(hist: np.ndarray, mids: np.ndarray, q: float) -> float:
 def summarize(cfg: FleetConfig, metrics, *, policy: str, load: float,
               rate_per_us: float, seed: int) -> FleetResult:
     """Reduce one configuration's device metrics (already indexed out of the
-    sweep batch and moved to host) to a :class:`FleetResult`."""
-    hist = np.asarray(metrics.hist)
+    sweep batch and moved to host) to a :class:`FleetResult`.
+
+    ``metrics.hist`` is ``(n_racks, hist_bins)``; fabric-wide statistics
+    come from the rack-summed histogram, per-rack tails from each row.
+    """
+    rack_hist = np.asarray(metrics.hist).reshape(cfg.n_racks, cfg.hist_bins)
+    hist = rack_hist.sum(axis=0)
     mids = bin_mids_us(cfg)
     total = int(hist.sum())
     mean = float((hist * mids).sum() / total) if total else float("nan")
@@ -96,8 +121,10 @@ def summarize(cfg: FleetConfig, metrics, *, policy: str, load: float,
         n_arrivals=int(metrics.n_arrivals),
         n_completed=int(metrics.n_completed),
         n_cloned=int(metrics.n_cloned),
+        n_interrack_cloned=int(metrics.n_interrack_cloned),
         n_clone_drops=int(metrics.n_clone_drops),
         n_filtered=int(metrics.n_filtered),
+        n_spine_filtered=int(metrics.n_spine_filtered),
         n_redundant_at_client=int(metrics.n_redundant),
         n_overflow=int(metrics.n_overflow),
         n_truncated=int(metrics.n_truncated),
@@ -105,4 +132,7 @@ def summarize(cfg: FleetConfig, metrics, *, policy: str, load: float,
         n_dedup_evicted=int(metrics.n_dedup_evicted),
         empty_queue_fraction=(int(metrics.n_resp_empty) / n_resp
                               if n_resp else 1.0),
+        rack_completed=tuple(int(r.sum()) for r in rack_hist),
+        rack_p50_us=tuple(hist_percentile(r, mids, 50.0) for r in rack_hist),
+        rack_p99_us=tuple(hist_percentile(r, mids, 99.0) for r in rack_hist),
     )

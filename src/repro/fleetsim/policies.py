@@ -83,18 +83,68 @@ _BRANCHES = {
 }
 
 
-def route(policy_id: jax.Array, server_state: jax.Array,
-          group_pairs: jax.Array, grp: jax.Array, r1: jax.Array,
-          r2: jax.Array):
+def route(policy_id: jax.Array, server_state: jax.Array, pair: jax.Array,
+          r1: jax.Array, r2: jax.Array):
     """Route a tick of arrival lanes under the (traced) policy id.
 
-    ``r1``/``r2`` are pre-drawn distinct uniform server candidates; ``grp``
-    indexes GrpT for the pair-based policies.  Returns
-    ``(dst1, dst2, cloned, clo1, clo2)`` arrays of shape (A,).
+    ``r1``/``r2`` are pre-drawn distinct uniform server candidates; ``pair``
+    is the GrpT lookup for the pair-based policies (``group_pairs[grp]``,
+    already offset into global server ids by the caller when the fabric has
+    more than one rack).  Returns ``(dst1, dst2, cloned, clo1, clo2)``
+    arrays of shape (A,).
     """
-    pair = group_pairs[grp]
     branches = [_BRANCHES[i] for i in sorted(_BRANCHES)]
     return jax.lax.switch(policy_id, branches, server_state, pair, r1, r2)
+
+
+def route_fabric(policy_id: jax.Array, server_state: jax.Array,
+                 pair: jax.Array, r1: jax.Array, r2: jax.Array,
+                 home_rack: jax.Array, remote_cand: jax.Array, *,
+                 n_racks: int, n_servers: int):
+    """Fabric routing: per-rack switch decision + spine inter-rack placement.
+
+    All server ids are fabric-global (``rack * n_servers + local``);
+    ``server_state`` is the flattened ``(n_racks * n_servers,)`` tracked
+    queue lengths.  Each lane first takes its home rack switch's ordinary
+    :func:`route` decision over local candidates.  With more than one rack,
+    the spine then upgrades NetClone-style lanes that could *not* clone
+    locally: when the home rack has no tracked-idle server, the spine forms
+    a *cross-rack pair* — the lane's first local candidate plus the lane's
+    uniform candidate ``remote_cand`` (a per-lane local server id) in the
+    least-loaded remote rack (§3.7 — the spine aggregates per-rack load from
+    the same piggybacked responses the rack switches see) — and applies the
+    same tracked-idle predicate to the remote member before placing the
+    CLO=2 copy on it.  Reusing the per-lane random candidate rather than the
+    remote rack's argmin keeps the clone volume self-throttling and avoids
+    herding every lane of a tick onto one server under one-tick-stale state,
+    exactly like the in-rack pair sampling.  Such pairs are later filtered
+    at the spine, the only switch both responses cross.
+
+    Returns ``(dst1, dst2, cloned, clo1, clo2)``; the caller derives the
+    inter-rack mask as ``cloned & (dst1 // n_servers != dst2 // n_servers)``.
+    """
+    dst1, dst2, cloned, clo1, clo2 = route(
+        policy_id, server_state, pair, r1, r2)
+    if n_racks == 1:
+        return dst1, dst2, cloned, clo1, clo2
+
+    per_rack = server_state.reshape(n_racks, n_servers)
+    rack_load = per_rack.sum(axis=1)              # spine's aggregated view
+    rack_min = per_rack.min(axis=1)
+    # least-loaded rack other than home, per lane
+    big = jnp.int32(1 << 24)
+    masked = rack_load[None, :] + jnp.where(
+        home_rack[:, None] == jnp.arange(n_racks)[None, :], big, 0)
+    r_star = jnp.argmin(masked, axis=1).astype(jnp.int32)     # (A,)
+    remote = r_star * n_servers + remote_cand    # cross-rack pair member
+    wants_clone = (policy_id == POLICY_NETCLONE) | (policy_id == POLICY_NCRS)
+    xclone = (wants_clone & ~cloned
+              & (rack_min[home_rack] > 0)        # home rack saturated
+              & (server_state[remote] == 0))     # remote member tracked-idle
+    dst2 = jnp.where(xclone, remote, dst2)
+    clo1 = jnp.where(xclone, CLO_ORIG, clo1).astype(jnp.int32)
+    clo2 = jnp.where(xclone, CLO_CLONE, clo2).astype(jnp.int32)
+    return dst1, dst2, cloned | xclone, clo1, clo2
 
 
 def dedup_tick(table: jax.Array, req_id: jax.Array,

@@ -1,20 +1,25 @@
-"""Device-resident fleet state: the whole rack as arrays.
+"""Device-resident fleet state: the whole 2-tier fabric as arrays.
 
 One :class:`FleetState` holds everything the DES keeps in Python objects —
-switch soft state (reused verbatim from ``repro.core.switch_jax``), per-server
-FCFS queues and worker pools, client receiver backlogs, and the running
-metrics — so a single ``lax.scan`` step can advance the entire cluster and
-``vmap`` can advance thousands of clusters.
+per-rack switch soft state (the same layout as ``repro.core.switch_jax``,
+stacked over a leading ``n_racks`` axis), a spine tier that assigns
+fabric-global REQ_IDs and filters inter-rack clone pairs, per-server FCFS
+queues and worker pools, client receiver backlogs, and the running metrics —
+so a single ``lax.scan`` step can advance the entire cluster and ``vmap``
+can advance thousands of clusters.
 
 Representation choices are driven by what is cheap inside a jitted scan on
 any backend (no sorts, few scatters):
 
 * each server's FCFS queue is a **ring buffer**: ``head``/``count`` scalars
-  per server plus one stacked ``(S, Q, QF)`` payload array, so enqueue and
+  per server plus one stacked ``(R, S, Q, QF)`` payload array, so enqueue and
   dequeue are a handful of gathers/scatters at computed offsets and FCFS
   order is positional — no stamps, no argsort;
-* worker metadata is likewise stacked into one ``(S, W, WF)`` array so a
-  tick writes it with a single scatter.
+* worker metadata is likewise stacked into one ``(R, S, W, WF)`` array so a
+  tick writes it with a single scatter;
+* rack-structured arrays carry a leading ``n_racks`` axis but the engine
+  flattens it away inside the tick, so every per-server op is the same
+  single gather/scatter it was for one ToR.
 
 Integer payload fields (req ids, CLO, …) ride in the float32 payload arrays;
 ``FleetConfig`` bounds req ids below 2²⁴ so the round-trip is exact.
@@ -27,19 +32,20 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.switch_jax import SwitchState, init_switch_state
 from repro.fleetsim.config import FleetConfig
 
-# queue payload fields, (S, Q, QF) — float32, ints exact below 2^24
+# queue payload fields, (R, S, Q, QF) — float32, ints exact below 2^24
 QF_BASE = 0     # intrinsic service demand (µs)
 QF_TARR = 1     # switch-arrival time (µs)
 QF_RID = 2      # REQ_ID
 QF_CLO = 3      # CLO marking
-QF_IDX = 4      # filter-table index
+QF_IDX = 4      # filter-table index (within one switch's table group)
 QF_CLIENT = 5   # client id
-QF = 6
+QF_HOP = 6      # extra per-copy hop latency (µs; inter-rack clone detour)
+QF_FRACK = 7    # filter location: home rack id, or n_racks for the spine
+QF = 8
 
-# worker payload fields, (S, W, WF).  A worker is busy iff REM > 0, so one
+# worker payload fields, (R, S, W, WF).  A worker is busy iff REM > 0, so one
 # stacked array (and one scatter per tick) carries the whole pool.
 WF_REM = 0      # remaining execution time (µs); 0 ⇔ idle
 WF_TARR = 1
@@ -47,31 +53,53 @@ WF_RID = 2
 WF_CLO = 3
 WF_IDX = 4
 WF_CLIENT = 5
-WF = 6
+WF_HOP = 6
+WF_FRACK = 7
+WF = 8
+
+
+class FabricSwitch(NamedTuple):
+    """All switch soft state of the 2-tier fabric (wiped on failure, §3.6).
+
+    ``seq`` lives at the spine so REQ_IDs are unique fabric-wide (the client
+    dedup table and the filter fingerprints key on REQ_ID alone).  Each rack
+    switch tracks only its own rack's piggybacked queue lengths; the spine's
+    aggregated per-rack view used for inter-rack placement is derived from
+    the same array.  ``filter_tables`` stacks the per-rack table groups plus
+    one extra group (index ``n_racks``) for the spine, which filters the
+    clone pairs whose copies span racks — the only point both responses of
+    such a pair traverse.
+    """
+
+    seq: jax.Array            # () int32 — spine-global REQ_ID sequence
+    server_state: jax.Array   # (n_racks, S) int32 — per-rack StateT/ShadowT
+    filter_tables: jax.Array  # (n_racks + 1, n_tables, n_slots) int32
 
 
 class RingQueues(NamedTuple):
-    """Per-server FCFS ring buffers."""
+    """Per-server FCFS ring buffers, rack-major."""
 
-    head: jax.Array     # (S,) int32 — oldest occupied slot
-    count: jax.Array    # (S,) int32 — waiting requests
-    data: jax.Array     # (S, Q, QF) float32 payload
+    head: jax.Array     # (n_racks, S) int32 — oldest occupied slot
+    count: jax.Array    # (n_racks, S) int32 — waiting requests
+    data: jax.Array     # (n_racks, S, Q, QF) float32 payload
 
 
 class Workers(NamedTuple):
-    meta: jax.Array     # (S, W, WF) float32 payload; busy ⇔ REM > 0
+    meta: jax.Array     # (n_racks, S, W, WF) float32 payload; busy ⇔ REM > 0
 
 
 class Metrics(NamedTuple):
-    """Running counters + the log-spaced latency histogram."""
+    """Running counters + the per-rack log-spaced latency histograms."""
 
-    hist: jax.Array             # (hist_bins,) int32 — in-window latencies
-    n_arrivals: jax.Array       # requests admitted at the switch
+    hist: jax.Array             # (n_racks, hist_bins) int32 — by serving rack
+    n_arrivals: jax.Array       # requests admitted at the fabric
     n_truncated: jax.Array      # Poisson arrivals clipped by lane headroom
-    n_dropped_down: jax.Array   # arrivals lost while the switch was dark
+    n_dropped_down: jax.Array   # arrivals lost while the fabric was dark
     n_cloned: jax.Array
+    n_interrack_cloned: jax.Array  # … of which the clone crossed racks
     n_clone_drops: jax.Array    # server-side CLO=2 stale-state drops
-    n_filtered: jax.Array       # redundant responses dropped at the switch
+    n_filtered: jax.Array       # redundant responses dropped at any switch
+    n_spine_filtered: jax.Array  # … of which at the spine (inter-rack pairs)
     n_redundant: jax.Array      # redundant responses absorbed at clients
     n_overflow: jax.Array       # queue-slot exhaustion drops
     n_dedup_evicted: jax.Array  # live client fingerprints lost to collisions
@@ -80,11 +108,11 @@ class Metrics(NamedTuple):
     n_completed_win: jax.Array  # … finishing inside the measurement window
     n_resp: jax.Array           # all server completions
     n_resp_empty: jax.Array     # … that piggybacked qlen == 0
-    lost_down_resp: jax.Array   # responses lost while the switch was dark
+    lost_down_resp: jax.Array   # responses lost while the fabric was dark
 
 
 class FleetState(NamedTuple):
-    switch: SwitchState         # seq / server_state / filter_tables
+    switch: FabricSwitch        # seq / per-rack server_state / filter groups
     dedup: jax.Array            # (n_dedup_slots,) int32 client fingerprints
     queues: RingQueues
     workers: Workers
@@ -93,11 +121,23 @@ class FleetState(NamedTuple):
     metrics: Metrics
 
 
+def init_fabric_switch(cfg: FleetConfig) -> FabricSwitch:
+    return FabricSwitch(
+        seq=jnp.zeros((), jnp.int32),
+        server_state=jnp.zeros((cfg.n_racks, cfg.n_servers), jnp.int32),
+        filter_tables=jnp.zeros(
+            (cfg.n_racks + 1, cfg.n_filter_tables, cfg.n_filter_slots),
+            jnp.int32),
+    )
+
+
 def init_metrics(cfg: FleetConfig) -> Metrics:
     z = jnp.zeros((), jnp.int32)
-    return Metrics(hist=jnp.zeros((cfg.hist_bins,), jnp.int32),
+    return Metrics(hist=jnp.zeros((cfg.n_racks, cfg.hist_bins), jnp.int32),
                    n_arrivals=z, n_truncated=z, n_dropped_down=z,
-                   n_cloned=z, n_clone_drops=z, n_filtered=z, n_redundant=z,
+                   n_cloned=z, n_interrack_cloned=z,
+                   n_clone_drops=z, n_filtered=z, n_spine_filtered=z,
+                   n_redundant=z,
                    n_overflow=z, n_dedup_evicted=z, n_resp_clipped=z,
                    n_completed=z,
                    n_completed_win=z, n_resp=z, n_resp_empty=z,
@@ -105,14 +145,14 @@ def init_metrics(cfg: FleetConfig) -> Metrics:
 
 
 def init_fleet_state(cfg: FleetConfig, key: jax.Array) -> FleetState:
-    s, q, w = cfg.n_servers, cfg.queue_cap, cfg.n_workers
+    r, s, q, w = cfg.n_racks, cfg.n_servers, cfg.queue_cap, cfg.n_workers
     return FleetState(
-        switch=init_switch_state(s, cfg.n_filter_tables, cfg.n_filter_slots),
+        switch=init_fabric_switch(cfg),
         dedup=jnp.zeros((cfg.n_dedup_slots,), jnp.int32),
-        queues=RingQueues(head=jnp.zeros((s,), jnp.int32),
-                          count=jnp.zeros((s,), jnp.int32),
-                          data=jnp.zeros((s, q, QF), jnp.float32)),
-        workers=Workers(meta=jnp.zeros((s, w, WF), jnp.float32)),
+        queues=RingQueues(head=jnp.zeros((r, s), jnp.int32),
+                          count=jnp.zeros((r, s), jnp.int32),
+                          data=jnp.zeros((r, s, q, QF), jnp.float32)),
+        workers=Workers(meta=jnp.zeros((r, s, w, WF), jnp.float32)),
         client_backlog=jnp.zeros((cfg.n_clients,), jnp.float32),
         key=key,
         metrics=init_metrics(cfg),

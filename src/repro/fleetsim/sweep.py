@@ -10,14 +10,14 @@ so heterogeneous scenarios ride in the same batch.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import numpy as np
 
 from repro.core.workloads import ServiceProcess, load_to_rate
 from repro.fleetsim.config import POLICY_IDS, FleetConfig, ServiceSpec
-from repro.fleetsim.engine import RunParams, simulate_batch
+from repro.fleetsim.engine import RunParams, check_fabric_arrays, simulate_batch
 from repro.fleetsim.metrics import FleetResult, summarize
 
 
@@ -54,6 +54,20 @@ def _as_spec(service) -> ServiceSpec:
                     f"got {type(service).__name__}")
 
 
+def rack_skew(cfg: FleetConfig, hot_rack_weight: float = 1.0,
+              straggler_rack_mult: float = 1.0,
+              ) -> tuple[np.ndarray, np.ndarray]:
+    """Build ``(rack_weights, slowdown)`` for the canonical skew scenario:
+    rack 0 receives ``hot_rack_weight``× the per-rack arrival share of the
+    others, and every server in the *last* rack executes
+    ``straggler_rack_mult``× slower.  Both default to 1.0 (no skew)."""
+    weights = np.ones(cfg.n_racks, np.float32)
+    weights[0] = hot_rack_weight
+    slowdown = np.ones((cfg.n_racks, cfg.n_servers), np.float32)
+    slowdown[-1, :] = straggler_rack_mult
+    return weights, slowdown.reshape(-1)
+
+
 def sweep_grid(
     service,
     policies: list[str],
@@ -61,16 +75,20 @@ def sweep_grid(
     seeds: list[int],
     cfg: FleetConfig | None = None,
     slowdown: np.ndarray | None = None,
+    rack_weights: np.ndarray | None = None,
     fail_window_ticks: tuple[int, int] | None = None,
     **cfg_kw,
 ) -> SweepResult:
     """Run every (policy, load, seed) combination in one jitted program.
 
-    ``slowdown`` (shape ``(n_servers,)``) injects stragglers into every run;
-    ``fail_window_ticks`` darkens the switch over ``[t0, t1)`` ticks and wipes
-    its soft state at recovery, for all runs.  Returns host-side results plus
-    wall-clock accounting (compile time reported separately so sweep cost is
-    judged on the steady-state number).
+    ``slowdown`` (shape ``(n_racks * n_servers,)`` or ``(n_racks,
+    n_servers)``) injects stragglers into every run; ``rack_weights``
+    (shape ``(n_racks,)``) skews the arrival mix toward hot racks (see
+    :func:`rack_skew` for the canonical one-hot-rack / one-straggler-rack
+    scenario); ``fail_window_ticks`` darkens the fabric over ``[t0, t1)``
+    ticks and wipes its soft state at recovery, for all runs.  Returns
+    host-side results plus wall-clock accounting (compile time reported
+    separately so sweep cost is judged on the steady-state number).
     """
     spec = _as_spec(service)
     if cfg is None:
@@ -88,9 +106,11 @@ def sweep_grid(
         if p not in POLICY_IDS:
             raise ValueError(f"unknown policy {p!r}; have {list(POLICY_IDS)}")
 
-    rates = {ld: load_to_rate(ld, spec, cfg.n_servers, cfg.n_workers)
+    rates = {ld: load_to_rate(ld, spec, cfg.n_servers_total, cfg.n_workers)
              for ld in loads}
     cfg = cfg.with_arrival_headroom(max(rates.values()))
+
+    slowdown, rack_weights = check_fabric_arrays(cfg, slowdown, rack_weights)
 
     grid = [(p, ld, s) for p in policies for ld in loads for s in seeds]
     g = len(grid)
@@ -100,9 +120,9 @@ def sweep_grid(
         policy_id=np.asarray([POLICY_IDS[p] for p, _, _ in grid], np.int32),
         rate_per_us=np.asarray([rates[ld] for _, ld, _ in grid], np.float32),
         seed=np.asarray([s for _, _, s in grid], np.int32),
-        slowdown=np.broadcast_to(
-            np.ones(cfg.n_servers, np.float32) if slowdown is None
-            else np.asarray(slowdown, np.float32), (g, cfg.n_servers)).copy(),
+        slowdown=np.broadcast_to(slowdown,
+                                 (g, cfg.n_servers_total)).copy(),
+        rack_weights=np.broadcast_to(rack_weights, (g, cfg.n_racks)).copy(),
         fail_from_tick=np.full(g, f0, np.int32),
         fail_until_tick=np.full(g, f1, np.int32),
     )

@@ -153,6 +153,12 @@ def cross_validate(
         cfg = FleetConfig(n_servers=n_servers, n_workers=n_workers,
                           n_ticks=n_ticks,
                           service=ServiceSpec.from_process(service))
+    if cfg.n_racks != 1:
+        # the DES models one ToR; the fabric's n_racks == 1 path is
+        # guaranteed bit-identical to the single-ToR engine, so validating
+        # it validates the shared per-rack machinery of the fabric too
+        raise ValueError("cross_validate requires n_racks == 1 "
+                         "(the DES is single-ToR)")
     fleet = sweep_grid(service, policies, loads, [seed], cfg=cfg)
 
     checks = []
@@ -179,3 +185,44 @@ def cross_validate(
                                        / des.n_requests),
             ))
     return checks
+
+
+def main(argv: list[str] | None = None) -> int:
+    """Full DES cross-validation — too slow for per-PR CI, run nightly.
+
+        PYTHONPATH=src python -m repro.fleetsim.validate [--requests N]
+
+    Runs every overlapping (policy, load) point through both engines and
+    exits non-zero if any point breaks the documented tolerances.
+    """
+    import argparse
+
+    from repro.core.workloads import ExponentialService
+
+    ap = argparse.ArgumentParser(description=main.__doc__)
+    ap.add_argument("--requests", type=int, default=20_000,
+                    help="DES requests per (policy, load) point")
+    ap.add_argument("--policies", nargs="*",
+                    default=["baseline", "c-clone", "netclone", "racksched",
+                             "netclone+racksched"])
+    ap.add_argument("--loads", nargs="*", type=float,
+                    default=[0.2, 0.5, 0.8])
+    ap.add_argument("--servers", type=int, default=4)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    checks = cross_validate(
+        ExponentialService(25.0), args.policies, args.loads,
+        n_servers=args.servers, n_workers=args.workers,
+        n_requests=args.requests, seed=args.seed)
+    n_ok = 0
+    for c in checks:
+        n_ok += c.ok
+        print(("[PASS] " if c.ok else "[FAIL] ") + c.describe())
+    print(f"{n_ok}/{len(checks)} points within tolerance")
+    return 0 if n_ok == len(checks) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

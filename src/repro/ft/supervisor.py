@@ -26,7 +26,6 @@ code exercised by ``tests/test_checkpoint_ft.py`` and the
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
 

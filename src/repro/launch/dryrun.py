@@ -28,7 +28,6 @@ import time
 import traceback
 from pathlib import Path
 
-import jax
 
 from repro.configs import ARCHS, SHAPES, get_config, supported_shapes
 from repro.launch.mesh import make_production_mesh

@@ -11,14 +11,13 @@ from dataclasses import dataclass
 from typing import Any
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.configs.shapes import ShapeSpec
 from repro.launch import specs as specs_mod
 from repro.models import family_of
 from repro.models.common import ModelConfig
 from repro.sharding import (
-    batch_axes,
     batch_spec,
     cache_shardings,
     data_shardings,

@@ -19,7 +19,6 @@ Modes: ``train`` (loss), ``prefill`` (returns per-layer caches), ``decode``
 
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

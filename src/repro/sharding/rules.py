@@ -17,7 +17,6 @@ valid for full configs, smoke configs and every mesh in the dry-run.
 
 from __future__ import annotations
 
-import math
 import re
 
 import jax

@@ -41,7 +41,8 @@ def lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
 
 
 def init_opt_state(params) -> OptState:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return OptState(mu=jax.tree.map(zeros, params),
                     nu=jax.tree.map(zeros, params),
                     step=jnp.zeros((), jnp.int32))

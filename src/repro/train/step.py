@@ -7,7 +7,6 @@ from dataclasses import dataclass
 from typing import Any, NamedTuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import family_of

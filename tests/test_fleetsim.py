@@ -6,7 +6,6 @@ filter rates, and delivered throughput within the tolerances documented in
 ``repro.fleetsim.validate``.
 """
 
-import dataclasses
 
 import jax
 import numpy as np

@@ -1,0 +1,287 @@
+"""Multi-rack fabric: bit-identity, inter-rack filtering, rack skew.
+
+Three contracts from the 2-tier extension:
+
+* ``n_racks == 1`` is **bit-identical** to the pre-fabric single-ToR engine
+  — enforced against golden metrics captured from that engine
+  (``tests/golden/fleetsim_single_tor.json``), covering every policy plus
+  straggler and switch-failure injection;
+* inter-rack clone pairs are filtered **exactly once** per (req_id, idx)
+  group at the spine, whichever order and tick their responses arrive in;
+* rack-skew injection (hot rack / straggler rack) engages inter-rack
+  cloning and the per-rack metrics expose it.
+"""
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.switch_jax import (
+    SwitchState,
+    fingerprint_hash_jax,
+    filter_tick_vectorized,
+)
+from repro.core.workloads import ExponentialService, load_to_rate
+from repro.fleetsim import (
+    POLICY_IDS,
+    FleetConfig,
+    ServiceSpec,
+    make_params,
+    rack_skew,
+    simulate,
+    summarize,
+)
+from repro.fleetsim.sweep import sweep_grid
+
+SVC = ExponentialService(25.0)
+GOLDEN = Path(__file__).parent / "golden" / "fleetsim_single_tor.json"
+
+
+def fabric_cfg(n_racks=2, **kw):
+    base = dict(n_racks=n_racks, n_servers=4, n_workers=8, queue_cap=64,
+                max_arrivals=10, n_ticks=4000,
+                service=ServiceSpec.exponential(25.0))
+    base.update(kw)
+    return FleetConfig(**base)
+
+
+def run(policy, load=0.4, seed=0, cfg=None, **param_kw):
+    cfg = cfg or fabric_cfg()
+    rate = load_to_rate(load, SVC, cfg.n_servers_total, cfg.n_workers)
+    params = make_params(cfg, POLICY_IDS[policy], rate, seed, **param_kw)
+    return cfg, jax.block_until_ready(simulate(cfg, params))
+
+
+# ----------------------------------------------------- golden bit-identity --
+def _golden():
+    return json.loads(GOLDEN.read_text())
+
+
+@pytest.mark.parametrize("case_i", range(len(_golden()["cases"])))
+def test_nracks1_bit_identical_to_single_tor_engine(case_i):
+    """The fabric with one rack replays the pre-fabric engine draw for draw:
+    every metric (including the full latency histogram) is bit-identical to
+    goldens captured from the single-ToR engine at PR 1."""
+    g = _golden()
+    cfg = FleetConfig(service=ServiceSpec.exponential(25.0), **g["cfg"])
+    c = g["cases"][case_i]
+    rate = load_to_rate(c["load"], SVC, cfg.n_servers, cfg.n_workers)
+    kw = {}
+    if "slowdown" in c:
+        kw["slowdown"] = np.asarray(c["slowdown"], np.float32)
+    if "fail_window" in c:
+        kw["fail_window"] = tuple(c["fail_window"])
+    params = make_params(cfg, POLICY_IDS[c["policy"]], rate, c["seed"], **kw)
+    m = jax.block_until_ready(simulate(cfg, params))
+    for field, want in c["metrics"].items():
+        got = np.asarray(getattr(m, field)).reshape(-1)
+        assert np.array_equal(got, np.asarray(want).reshape(-1)), field
+
+
+# ------------------------------------------- exactly-once inter-rack filter --
+N_RACKS, N_TABLES, N_SLOTS = 2, 2, 1024
+
+
+def _fabric_filter(tables, rid, idx, active=None):
+    """One response tick through the flattened fabric filter, exactly as the
+    engine runs it (rack table groups + the spine group in one stack)."""
+    rid = jnp.asarray(rid, jnp.int32)
+    if active is None:
+        active = jnp.ones(rid.shape, bool)
+    state = SwitchState(seq=jnp.zeros((), jnp.int32),
+                        server_state=jnp.zeros((4,), jnp.int32),
+                        filter_tables=tables)
+    new_state, res = filter_tick_vectorized(
+        state, rid, jnp.asarray(idx, jnp.int32),
+        jnp.ones(rid.shape, jnp.int32),            # CLO > 0: touches FilterT
+        jnp.zeros(rid.shape, jnp.int32), jnp.zeros(rid.shape, jnp.int32),
+        jnp.asarray(active))
+    return new_state.filter_tables, np.asarray(res.drop)
+
+
+def _slot(rid):
+    return int(fingerprint_hash_jax(jnp.int32(rid), N_SLOTS))
+
+
+def _exactly_once(pairs):
+    """Feed each (rid, row, split) pair's two responses through the fabric
+    filter — same tick or split across two — and count drops per pair."""
+    tables = jnp.zeros(((N_RACKS + 1) * N_TABLES, N_SLOTS), jnp.int32)
+    tick1, tick2 = [], []
+    for rid, row, split in pairs:
+        tick1.append((rid, row))
+        (tick2 if split else tick1).append((rid, row))
+    drops = {rid: 0 for rid, _, _ in pairs}
+    for lanes in (tick1, tick2):
+        if not lanes:
+            continue
+        rid = np.array([r for r, _ in lanes], np.int32)
+        row = np.array([x for _, x in lanes], np.int32)
+        tables, drop = _fabric_filter(tables, rid, row)
+        for r, d in zip(rid, drop):
+            drops[int(r)] += int(d)
+    # every pair dropped exactly once; the stack fully drained
+    assert all(n == 1 for n in drops.values()), drops
+    assert int(jnp.sum(tables != 0)) == 0
+
+
+def test_interrack_pairs_filtered_exactly_once_deterministic():
+    rng = np.random.default_rng(0)
+    used = set()
+    pairs = []
+    rid = 1
+    while len(pairs) < 60:
+        row = int(rng.integers(0, (N_RACKS + 1) * N_TABLES))
+        key = (row, _slot(rid))
+        if key not in used:         # avoid unrelated same-slot collisions
+            used.add(key)
+            pairs.append((rid, row, bool(rng.integers(0, 2))))
+        rid += 1
+    _exactly_once(pairs)
+
+
+@given(st.lists(
+    st.tuples(st.integers(min_value=1, max_value=2 ** 20),
+              st.integers(min_value=0, max_value=(N_RACKS + 1) * N_TABLES - 1),
+              st.booleans()),
+    min_size=1, max_size=24, unique_by=lambda p: p[0]))
+@settings(max_examples=50, deadline=None)
+def test_interrack_pairs_filtered_exactly_once_property(pairs):
+    """Property form: any mix of rack-local and spine (req_id, idx) groups,
+    same-tick or split across ticks, drops each pair exactly once."""
+    seen = set()
+    kept = []
+    for rid, row, split in pairs:
+        key = (row, _slot(rid))
+        if key not in seen:         # distinct slots ⇒ exact sequential match
+            seen.add(key)
+            kept.append((rid, row, split))
+    _exactly_once(kept)
+
+
+# --------------------------------------------------------- fabric behavior --
+@pytest.mark.parametrize("backend", ["scan", "pallas"])
+def test_fabric_filter_backends_match_vectorized(backend):
+    """The flattened rack+spine table stack behaves identically under every
+    filter backend, inter-rack pairs included."""
+    cfg_kw = dict(n_ticks=2000, max_arrivals=8)
+    _, ref = run("netclone", load=0.55, seed=7,
+                 cfg=fabric_cfg(**cfg_kw),
+                 rack_weights=[0.85, 0.15])
+    _, alt = run("netclone", load=0.55, seed=7,
+                 cfg=fabric_cfg(filter_backend=backend, **cfg_kw),
+                 rack_weights=[0.85, 0.15])
+    assert int(ref.n_interrack_cloned) > 0      # spine rows exercised
+    for f in ref._fields:
+        assert np.array_equal(np.asarray(getattr(ref, f)),
+                              np.asarray(getattr(alt, f))), f
+
+
+def test_multirack_conservation():
+    for policy in ("baseline", "netclone", "netclone+racksched"):
+        cfg, m = run(policy, load=0.5, rack_weights=[0.8, 0.2])
+        n_arr = int(m.n_arrivals)
+        assert n_arr > 0 and int(m.n_completed) > 0
+        in_flight = cfg.n_servers_total * (cfg.n_workers + cfg.queue_cap) \
+            + 2 * cfg.max_arrivals
+        assert 0 <= n_arr - int(m.n_completed) - int(m.n_overflow) <= in_flight
+        # clone bookkeeping, fabric-wide and per tier
+        assert int(m.n_interrack_cloned) <= int(m.n_cloned)
+        assert int(m.n_spine_filtered) <= int(m.n_filtered)
+        assert int(m.n_filtered) <= int(m.n_cloned)
+        # the spine only ever filters inter-rack pairs
+        assert int(m.n_spine_filtered) <= int(m.n_interrack_cloned)
+        # per-rack histograms partition the in-window completions
+        assert int(np.asarray(m.hist).sum()) == int(m.n_completed_win)
+        assert np.asarray(m.hist).shape == (cfg.n_racks, cfg.hist_bins)
+
+
+def test_hot_rack_triggers_interrack_cloning():
+    """With one hot rack the home ToR saturates while the cool rack stays
+    tracked-idle — the spine must place clones across racks and filter their
+    pairs; with uniform arrivals it mostly should not."""
+    _, hot = run("netclone", load=0.55, rack_weights=[0.85, 0.15])
+    assert int(hot.n_interrack_cloned) > 100
+    assert int(hot.n_spine_filtered) > 0
+    _, uniform = run("netclone", load=0.55)
+    assert int(uniform.n_interrack_cloned) < int(hot.n_interrack_cloned) / 4
+    # the cool rack absorbs a visible share of the hot rack's work
+    served_cool = np.asarray(hot.hist).sum(axis=1)[1]
+    assert served_cool > 0.15 * np.asarray(hot.hist).sum()
+
+
+def test_interrack_cloning_cuts_hot_rack_tail():
+    """§3.7: under rack skew, inter-rack cloning beats single-copy routing
+    confined to the home rack."""
+    cfg = fabric_cfg(n_ticks=8000)
+    base = summarize(cfg, run("baseline", load=0.5, cfg=cfg,
+                              rack_weights=[0.85, 0.15])[1],
+                     policy="baseline", load=0.5, rate_per_us=0.0, seed=0)
+    nc = summarize(cfg, run("netclone", load=0.5, cfg=cfg,
+                            rack_weights=[0.85, 0.15])[1],
+                   policy="netclone", load=0.5, rate_per_us=0.0, seed=0)
+    assert nc.p99_us < base.p99_us
+    assert nc.n_interrack_cloned > 0
+
+
+def test_straggler_rack_skew_helper():
+    cfg = fabric_cfg(n_racks=3)
+    weights, slowdown = rack_skew(cfg, hot_rack_weight=2.0,
+                                  straggler_rack_mult=3.0)
+    assert weights.tolist() == [2.0, 1.0, 1.0]
+    assert slowdown.shape == (cfg.n_servers_total,)
+    assert slowdown.reshape(3, -1)[2].tolist() == [3.0] * cfg.n_servers
+    _, m = run("netclone+racksched", load=0.4, cfg=cfg,
+               rack_weights=weights, slowdown=slowdown)
+    assert int(m.n_completed) > 0
+
+
+def test_multirack_sweep_grid_per_rack_metrics():
+    cfg = fabric_cfg(n_ticks=2500)
+    weights, slowdown = rack_skew(cfg, hot_rack_weight=4.0)
+    sw = sweep_grid(SVC, ["baseline", "netclone"], [0.45], [0, 1], cfg=cfg,
+                    rack_weights=weights, slowdown=slowdown)
+    assert sw.n_configs == 4
+    for r in sw.results:
+        assert len(r.rack_p99_us) == cfg.n_racks
+        assert len(r.rack_completed) == cfg.n_racks
+        assert sum(r.rack_completed) > 0
+        assert "rack_p99_us" in r.row()
+    nc = sw.select(policy="netclone")
+    assert all(r.n_interrack_cloned > 0 for r in nc)
+
+
+def test_fabric_config_validation():
+    with pytest.raises(ValueError):
+        FleetConfig(n_racks=0)
+    cfg = fabric_cfg(n_racks=4)
+    assert cfg.n_servers_total == 16
+    assert cfg.spine_extra_us > 0 and cfg.interrack_extra_us > 0
+    single = fabric_cfg(n_racks=1)
+    assert single.spine_extra_us == 0.0 and single.interrack_extra_us == 0.0
+    with pytest.raises(ValueError):
+        make_params(cfg, 0, 1.0, 0, slowdown=np.ones(3, np.float32))
+    with pytest.raises(ValueError):
+        make_params(cfg, 0, 1.0, 0, rack_weights=np.ones(2, np.float32))
+    with pytest.raises(ValueError):
+        sweep_grid(SVC, ["baseline"], [0.2], [0], cfg=cfg,
+                   rack_weights=np.ones(3, np.float32))
+
+
+# ------------------------------------------------------- benchmark harness --
+def test_benchmarks_run_rejects_unknown_args(monkeypatch, capsys):
+    brun = pytest.importorskip("benchmarks.run")
+    with pytest.raises(SystemExit) as exc:
+        monkeypatch.setattr("sys.argv", ["run.py", "--engine", "nope"])
+        brun.main()
+    assert exc.value.code == 2
+    with pytest.raises(SystemExit) as exc:
+        monkeypatch.setattr("sys.argv", ["run.py", "no_such_figure"])
+        brun.main()
+    assert exc.value.code == 2
+    assert "no_such_figure" in capsys.readouterr().err

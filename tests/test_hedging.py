@@ -10,7 +10,6 @@ Three contract points from the Tail-at-Scale framing:
 """
 
 import numpy as np
-import pytest
 
 from repro.core.header import CLO_CLONE, CLO_ORIG, Request, Response
 from repro.core.hedging import HedgePolicy

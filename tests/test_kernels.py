@@ -6,7 +6,6 @@ naive recurrences.
 """
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 from _hypothesis_compat import given, settings, st

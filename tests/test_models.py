@@ -108,12 +108,14 @@ def test_multi_token_decode_consistency(arch):
         _, cache = whisper.prefill(cfg, params, batch["frames"],
                                    tokens[:, : S - n_extra],
                                    s_max=S + 8)
-        step = lambda t, p, c: whisper.decode_step(cfg, params, t, p, c)
+        def step(t, p, c):
+            return whisper.decode_step(cfg, params, t, p, c)
     else:
         full, _ = lm.forward(cfg, params, tokens, eval_mode=True)
         _, cache = lm.prefill(cfg, params, tokens[:, : S - n_extra],
                               s_max=S + 8)
-        step = lambda t, p, c: lm.decode_step(cfg, params, t, p, c)
+        def step(t, p, c):
+            return lm.decode_step(cfg, params, t, p, c)
     for i in range(n_extra):
         pos = jnp.full((B,), S - n_extra + i, jnp.int32)
         lg, cache = step(tokens[:, S - n_extra + i : S - n_extra + i + 1],
@@ -191,7 +193,6 @@ def test_int8_kv_cache_decode_close(arch):
 
 def test_moe_capacity_drops_in_train_mode():
     """Train mode drops over-capacity tokens; inference is dropless."""
-    from repro.models.ffn import moe_forward
     cfg = get_config("deepseek-moe-16b", smoke=True)
     fam = family_of(cfg)
     params = fam.init_params(cfg, KEY)

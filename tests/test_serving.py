@@ -110,7 +110,6 @@ def test_racksched_integration_routes_to_shorter_queue(small_model):
     cfg, params = small_model
     reps, srv = _mk(cfg, params, "netclone+racksched", n_replicas=2, seed=11)
     # make replica 0 look loaded via piggybacked state
-    import jax.numpy as jnp
     srv.state = srv.state._replace(
         server_state=srv.state.server_state.at[0].set(5))
     rng = np.random.default_rng(11)

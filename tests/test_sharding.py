@@ -9,7 +9,6 @@ import json
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 

@@ -1,12 +1,10 @@
 """Integration + property tests for the discrete-event cluster simulator."""
 
-import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.simulator import NetworkCosts, Simulator
 from repro.core.workloads import (
-    BimodalService,
     ExponentialService,
     KVStoreService,
     load_to_rate,

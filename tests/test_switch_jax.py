@@ -5,7 +5,7 @@ import jax.numpy as jnp
 from _hypothesis_compat import given, settings, st
 
 from repro.core import switch_jax as sw
-from repro.core.header import CLO_CLONE, CLO_NONE, CLO_ORIG, Request, Response
+from repro.core.header import CLO_CLONE, CLO_ORIG, Request, Response
 from repro.core.switch import NetCloneSwitch
 
 

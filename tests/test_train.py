@@ -11,7 +11,6 @@ from repro.train.compress import compress_grads, init_ef_state
 from repro.train.optimizer import (
     OptimizerConfig,
     adamw_update,
-    global_norm,
     init_opt_state,
     lr_at,
 )
