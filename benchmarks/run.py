@@ -7,16 +7,19 @@ results/dryrun) the roofline table.
     PYTHONPATH=src python -m benchmarks.run [figures...]
     PYTHONPATH=src python -m benchmarks.run --engine fleetsim
     PYTHONPATH=src python -m benchmarks.run --engine fleetsim --racks 4 \
-        --hot-rack-weight 3.0 --straggler-mult 2.0
+        --hot-rack-weight 3.0 --straggler-mult 2.0 --out /tmp/bench.json
     REPRO_BENCH_FAST=1  → reduced request counts (CI)
 
 ``--engine fleetsim`` runs the policy × load × seed grid through the jitted,
-vmapped FleetSim (one device program for the whole grid) and writes
-``results/bench/BENCH_fleetsim.json`` with wall-clock + simulated-MRPS
-numbers, per-rack tail latencies, and the DES cross-validation scoreboard.
-``--racks N`` sweeps the 2-tier fabric (spine + N rack switches);
-``--hot-rack-weight`` / ``--straggler-mult`` inject rack skew.  Unknown
-figure names and ``--engine`` values are hard argparse errors.
+vmapped FleetSim (one device program for the whole grid): the grid is a
+declarative ``repro.scenarios.SweepSpec`` over every policy registered for
+both engines, with wall-clock + simulated-MRPS numbers, per-rack tail
+latencies, and the DES cross-validation scoreboard.  ``--out PATH`` writes
+the artifact (by default nothing is written, keeping the checked-in
+``results/bench/BENCH_fleetsim.json`` reference stable).  ``--racks N``
+sweeps the 2-tier fabric (spine + N rack switches); ``--hot-rack-weight`` /
+``--straggler-mult`` inject rack skew.  Unknown figure names and
+``--engine`` values are hard argparse errors.
 """
 
 from __future__ import annotations
@@ -77,34 +80,39 @@ def _microbenches() -> list[str]:
 def run_fleetsim(args) -> None:
     """One jitted sweep over the full policy × load × seed grid (optionally
     a multi-rack fabric with hot-rack / straggler-rack skew), plus the DES
-    cross-validation scoreboard on a subset of overlapping points."""
-    import os
+    cross-validation scoreboard on a subset of overlapping points.
 
-    from repro.core.workloads import ExponentialService
-    from repro.fleetsim import FleetConfig, ServiceSpec
-    from repro.fleetsim.sweep import rack_skew, sweep_grid
-    from repro.fleetsim.validate import cross_validate
+    Built on the Scenario API: the grid is a declarative ``SweepSpec`` whose
+    ``policies="registered"`` default expands to every policy registered for
+    both engines — a custom registration enters the benchmark with no edits
+    here.  The artifact is written only when ``--out`` is given, so routine
+    sweeps stop rewriting the checked-in ``BENCH_fleetsim.json``.
+    """
+    import os
+    from dataclasses import replace
+
+    from repro.fleetsim.validate import cross_validate_spec
+    from repro.scenarios import Scenario, ServiceSpec, SweepSpec
 
     fast = bool(int(os.environ.get("REPRO_BENCH_FAST", "0")))
-    policies = ["baseline", "c-clone", "netclone", "racksched",
-                "netclone+racksched"]
     loads = [0.1, 0.2, 0.35, 0.5, 0.65, 0.8, 0.9, 0.95][:args.loads]
-    seeds = list(range(args.seeds))
-    svc = ExponentialService(25.0)
-    cfg = FleetConfig(n_racks=args.racks, n_servers=args.servers,
-                      n_workers=args.workers,
-                      n_ticks=min(args.ticks, 10_000) if fast else args.ticks,
-                      service=ServiceSpec.from_process(svc))
-    weights, slowdown = rack_skew(cfg, hot_rack_weight=args.hot_rack_weight,
-                                  straggler_rack_mult=args.straggler_mult)
+    base = Scenario(
+        name="bench", racks=args.racks, servers=args.servers,
+        workers=args.workers,
+        n_ticks=min(args.ticks, 10_000) if fast else args.ticks,
+        hot_rack_weight=args.hot_rack_weight,
+        straggler_rack_mult=args.straggler_mult,
+        service=ServiceSpec.exponential(25.0))
+    spec = SweepSpec(base=base, policies="registered", loads=tuple(loads),
+                     seeds=tuple(range(args.seeds)))
+    policies = spec.resolved_policies()
 
-    n_cfg = len(policies) * len(loads) * len(seeds)
+    n_cfg = len(policies) * len(loads) * args.seeds
     print(f"== fleetsim sweep: {len(policies)} policies x {len(loads)} loads "
-          f"x {len(seeds)} seeds = {n_cfg} configurations, "
+          f"x {args.seeds} seeds = {n_cfg} configurations, "
           f"{args.racks} rack(s) x {args.servers} servers, "
-          f"{cfg.n_ticks} ticks each ==")
-    sw = sweep_grid(svc, policies, loads, seeds, cfg=cfg,
-                    rack_weights=weights, slowdown=slowdown)
+          f"{base.n_ticks} ticks each ==")
+    sw = spec.run_fleetsim()
     print(f"compile {sw.compile_s:.1f}s  run {sw.wall_clock_s:.1f}s  "
           f"{sw.simulated_requests/1e6:.1f}M simulated requests  "
           f"{sw.simulated_mrps:.2f} MRPS-simulated")
@@ -112,7 +120,7 @@ def run_fleetsim(args) -> None:
     keys = list(sw.results[0].row().keys())
     print(",".join(keys))
     for r in sw.results:
-        if r.seed == seeds[0]:
+        if r.seed == 0:
             print(",".join(str(r.row()[k]) for k in keys))
 
     checks = []
@@ -122,36 +130,49 @@ def run_fleetsim(args) -> None:
         # every rack of a multi-rack sweep runs (tests/test_fleetsim_fabric)
         print("\n== DES cross-validation, single-rack path (documented "
               "tolerances in repro/fleetsim/validate.py) ==")
-        checks = cross_validate(
-            svc, ["baseline", "netclone", "c-clone"], [0.2, 0.5, 0.8],
-            n_servers=args.servers, n_workers=args.workers,
-            n_requests=8_000 if fast else 20_000)
+        vspec = SweepSpec(
+            base=replace(base, racks=1, hot_rack_weight=1.0,
+                         straggler_rack_mult=1.0),
+            policies=("baseline", "netclone", "c-clone"),
+            loads=(0.2, 0.5, 0.8), seeds=(0,))
+        checks = cross_validate_spec(
+            vspec, n_requests=8_000 if fast else 20_000)
         for c in checks:
             print(("[PASS] " if c.ok else "[FAIL] ") + c.describe())
         print(f"{sum(c.ok for c in checks)}/{len(checks)} points agree")
 
-    outdir = Path("results/bench")
-    outdir.mkdir(parents=True, exist_ok=True)
+    if not args.out:
+        print("\n(no --out given: artifact not written)")
+        return
+    from repro.fleetsim.sweep import rack_skew
+
+    # record the very weights the sweep ran with (same helper the
+    # SweepSpec path uses), not a hand-rebuilt copy of its convention
+    weights, _ = rack_skew(base.fleet_config(), args.hot_rack_weight,
+                           args.straggler_mult)
     payload = {
         "engine": "fleetsim",
-        "n_racks": cfg.n_racks,
-        "n_servers_per_rack": cfg.n_servers,
+        "n_racks": args.racks,
+        "n_servers_per_rack": args.servers,
         "rack_weights": [float(w) for w in weights],
         "straggler_rack_mult": args.straggler_mult,
         "n_configs": sw.n_configs,
-        "n_ticks": cfg.n_ticks,
+        "n_ticks": base.n_ticks,
         "wall_clock_s": round(sw.wall_clock_s, 3),
         "compile_s": round(sw.compile_s, 3),
         "simulated_requests": sw.simulated_requests,
         "simulated_mrps": round(sw.simulated_mrps, 3),
+        "sweep_spec": spec.to_json(),
         "rows": [r.row() for r in sw.results],
         "cross_validation": [
             {"policy": c.policy, "load": c.load, "pass": bool(c.ok),
              "saturated": bool(c.saturated), "detail": c.describe()}
             for c in checks],
     }
-    (outdir / "BENCH_fleetsim.json").write_text(json.dumps(payload, indent=1))
-    print(f"\nwrote {outdir / 'BENCH_fleetsim.json'}")
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(payload, indent=1))
+    print(f"\nwrote {out}")
 
 
 def main() -> None:
@@ -176,6 +197,10 @@ def main() -> None:
                     help="execution slowdown for the last rack (fleetsim)")
     ap.add_argument("--no-validate", action="store_true",
                     help="skip the DES cross-validation pass")
+    ap.add_argument("--out", default=None,
+                    help="write the fleetsim sweep artifact to this path "
+                         "(default: none, so routine runs don't rewrite the "
+                         "checked-in results/bench/BENCH_fleetsim.json)")
     args = ap.parse_args()
 
     if args.engine == "fleetsim":

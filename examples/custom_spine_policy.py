@@ -1,0 +1,87 @@
+"""Register a custom policy ONCE, run it through both engines + every sweep.
+
+The unified registry (``repro.scenarios.registry``) is the extension point
+the ROADMAP's "smarter spine policies" item asks for: one ``register()``
+call gives a policy a DES factory, an array-form route branch, and optional
+spine hooks — and it immediately shows up in ``POLICY_IDS``, in
+``policies="registered"`` sweeps, and in ``python -m repro.scenarios
+--list``, with no engine edits.
+
+The demo variant, ``netclone+pow2spine``, changes *where the spine places
+inter-rack clones* (§3.7): instead of the least-loaded remote rack, it
+samples two candidate racks and takes the less loaded (power-of-two-choices
+over racks — RackSched's trick lifted one tier up).  In-rack behaviour is
+exactly NetClone's tracked-idle-pair branch, so with one rack it degenerates
+to NetClone — which is what its DES factory runs.
+
+    PYTHONPATH=src python examples/custom_spine_policy.py
+"""
+
+import jax.numpy as jnp
+
+from repro.core.policies import NetClonePolicy
+from repro.scenarios import DuplicatePolicyError, Scenario, registry
+
+
+def pow2_spine_place(rack_load, server_state, home, r1, r2, remote_cand, *,
+                     n_racks, n_servers):
+    """Power-of-two-choices over racks: two candidate remote racks (derived
+    from the lane's local server draws, so no extra PRNG traffic), the less
+    loaded wins; the remote pair member is the lane's uniform candidate in
+    that rack, exactly like the default placement."""
+    la = (r1 % n_servers) % (n_racks - 1)
+    lb = (r2 % n_servers) % (n_racks - 1)
+    ra = (home + 1 + la) % n_racks            # never the home rack
+    rb = (home + 1 + lb) % n_racks
+    pick = jnp.where(rack_load[ra] <= rack_load[rb], ra, rb)
+    return pick * n_servers + remote_cand
+
+
+def register_pow2(policy_id: int = 5):
+    """One registration covers the DES (NetClone semantics — the spine
+    variant only differs when racks > 1), the FleetSim route branch (shared
+    with netclone), and the spine placement hook."""
+    try:
+        return registry.register(
+            "netclone+pow2spine",
+            policy_id=policy_id,
+            des=NetClonePolicy,
+            route=registry.route_of("netclone"),
+            spine_clone=True,
+            spine_place=pow2_spine_place,
+            description="NetClone + power-of-two-choices spine placement")
+    except DuplicatePolicyError:
+        return registry.get("netclone+pow2spine")
+
+
+def main():
+    register_pow2()
+    print("registered:", registry.get("netclone+pow2spine"))
+    from repro.fleetsim import POLICY_IDS
+
+    print("POLICY_IDS now:", dict(POLICY_IDS))
+
+    # one Scenario object, both engines (single ToR: degenerates to NetClone)
+    sc = Scenario(name="pow2-demo", policy="netclone+pow2spine", load=0.4,
+                  servers=4, workers=8, n_ticks=12_000)
+    fr = sc.run_fleetsim()
+    dr = sc.run_des(n_requests=6_000)
+    print(f"\nsingle ToR, both engines from one Scenario:")
+    print(f"  fleetsim p50={fr.p50_us:6.1f}µs p99={fr.p99_us:7.1f}µs "
+          f"clone%={fr.clone_fraction:5.1%}")
+    print(f"  des      p50={dr.p50_us:6.1f}µs p99={dr.p99_us:7.1f}µs "
+          f"clone%={dr.n_cloned / dr.n_requests:5.1%}")
+
+    # where it differs: a 4-rack fabric with one hot rack
+    print("\n4-rack fabric, rack 0 hot (4x arrival share, load 0.55):")
+    for pol in ("netclone", "netclone+pow2spine"):
+        r = Scenario(name="hot", policy=pol, load=0.55, racks=4, servers=4,
+                     workers=8, n_ticks=20_000,
+                     hot_rack_weight=4.0).run_fleetsim()
+        print(f"  {pol:22s} p99={r.p99_us:7.1f}µs "
+              f"inter-rack clones={r.n_interrack_cloned:6d} "
+              f"hot-rack p99={r.rack_p99_us[0]:7.1f}µs")
+
+
+if __name__ == "__main__":
+    main()

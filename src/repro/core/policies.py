@@ -28,11 +28,14 @@ server whose queue is non-empty; CLO_NONE/CLO_ORIG are always served.
 
 from __future__ import annotations
 
+from collections.abc import Mapping
+
 import numpy as np
 
 from repro.core.header import CLO_CLONE, CLO_NONE, CLO_ORIG, Request, Response
 from repro.core.switch import NetCloneSwitch, SwitchCosts
 from repro.core.tables import StateTable
+from repro.scenarios import registry
 
 #: (packet, extra-switch-delay-µs) pairs emitted by ``route``
 Copy = tuple[Request, float]
@@ -257,18 +260,66 @@ def _hedge_factory(n_servers, **kw):
     return HedgePolicy(n_servers, **kw)
 
 
-POLICIES = {
-    "hedge": _hedge_factory,
-    "baseline": RandomPolicy,
-    "c-clone": CClonePolicy,
-    "netclone": NetClonePolicy,
-    "racksched": RackSchedPolicy,
-    "netclone+racksched": NetCloneRackSchedPolicy,
-    "laedge": LaedgePolicy,
-}
+def _netclone_nofilter_factory(n_servers, **kw):
+    return NetClonePolicy(n_servers, filtering_enabled=False, **kw)
+
+
+# --------------------------------------------------------------- registry ---
+# Each policy is registered ONCE, here, with its stable array-engine id and
+# DES factory; ``repro.fleetsim.policies`` attaches the array-form branches
+# to the same entries.  ``POLICY_IDS``/``POLICY_NAMES``, the fleetsim branch
+# tables, and every ``policies="registered"`` sweep derive from this table.
+registry.register(
+    "baseline", policy_id=0, des=RandomPolicy,
+    description="uniform random single copy (the paper's baseline)")
+registry.register(
+    "c-clone", policy_id=1, des=CClonePolicy, client_dup=True,
+    description="client always sends two copies; no filtering [Vulimiri+13]")
+registry.register(
+    "netclone", policy_id=2, des=NetClonePolicy, spine_clone=True,
+    description="dynamic cloning on tracked idle pairs + response filtering")
+registry.register(
+    "racksched", policy_id=3, des=RackSchedPolicy,
+    description="power-of-two-choices JSQ on piggybacked loads [OSDI'20]")
+registry.register(
+    "netclone+racksched", policy_id=4, des=NetCloneRackSchedPolicy,
+    spine_clone=True,
+    description="§3.7: idle-idle pair clones, JSQ fallback otherwise")
+registry.register(
+    "laedge", des=LaedgePolicy,
+    description="LÆDGE coordinator node (DES only: needs a CPU queue)")
+registry.register(
+    "hedge", des=_hedge_factory,
+    description="delayed hedging (DES only: needs per-request timers)")
+registry.register(
+    "netclone-nofilter", des=_netclone_nofilter_factory,
+    description="NetClone with response filtering disabled (Fig. 15)")
+
+
+class _DESPolicies(Mapping):
+    """Live registry view of the DES-capable factories (legacy
+    ``POLICIES`` shape — prefer ``repro.scenarios.registry``)."""
+
+    def __getitem__(self, name):
+        d = registry.get(name)
+        if d.des is None:
+            raise KeyError(name)
+        return d.des
+
+    def __iter__(self):
+        return (n for n in registry.names()
+                if registry.get(n).des is not None)
+
+    def __len__(self):
+        return sum(1 for _ in iter(self))
+
+
+POLICIES = _DESPolicies()
 
 
 def make_policy(name: str, n_servers: int, **kw) -> SwitchPolicy:
-    if name == "netclone-nofilter":
-        return NetClonePolicy(n_servers, filtering_enabled=False, **kw)
-    return POLICIES[name](n_servers, **kw)
+    """Build the DES policy registered under ``name``."""
+    d = registry.get(name)
+    if d.des is None:
+        raise ValueError(f"policy {name!r} has no DES implementation")
+    return d.des(n_servers, **kw)

@@ -30,7 +30,9 @@ import numpy as np
 
 from repro.core.header import CLO_CLONE, CLO_NONE, Request, Response
 from repro.core.policies import SwitchPolicy, _clone_of, make_policy
-from repro.core.workloads import ServiceProcess, load_to_rate
+from repro.core.workloads import ServiceProcess, load_to_rate, rate_to_load
+from repro.scenarios import registry
+from repro.scenarios.arrival import PoissonArrival
 
 # event kinds
 _REQ_AT_SWITCH = 0
@@ -114,6 +116,10 @@ class Simulator:
         **policy_kw,
     ):
         self.n_servers = n_servers
+        # the *registered* name (registry flags like client_dup hang off it;
+        # a custom registration may reuse a stock factory whose .name
+        # differs) — None for ad-hoc policy objects passed in directly
+        self._registered_name = policy if isinstance(policy, str) else None
         if isinstance(policy, str):
             policy = make_policy(policy, n_servers, **policy_kw)
         self.policy = policy
@@ -167,12 +173,38 @@ class Simulator:
         warmup_frac: float = 0.1,
         cooldown_frac: float = 0.05,
         timeline_bin_us: float | None = None,
+        arrival=None,
+        n_ticks: int | None = None,
     ) -> SimResult:
+        """Replay one configuration.
+
+        ``arrival`` plugs in a :class:`repro.scenarios.arrival
+        .ArrivalProcess`; the default (``None``) is the paper's open-loop
+        Poisson at the load-derived rate.  A trace arrival replays its
+        per-tick counts over ``n_ticks`` ticks (tiled like the array
+        engine), ignoring ``offered_load``/``n_requests`` — the trace *is*
+        the offered schedule.
+        """
         c = self.costs
         rate = load_to_rate(offered_load, self.service,
                             self.n_servers, self.n_workers)
         rng = self.rng
-        arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+        if arrival is None:
+            arrival = PoissonArrival()
+        if arrival.kind == "trace":
+            if n_ticks is None:
+                raise ValueError("trace arrivals need n_ticks")
+            arrivals = arrival.des_times(rng, rate, 0, n_ticks=n_ticks)
+            if len(arrivals) == 0:
+                raise ValueError("trace produced no arrivals")
+            n_requests = len(arrivals)
+            rate = arrival.mean_rate_per_us(rate, n_ticks)
+            offered_load = rate_to_load(rate, self.service,
+                                        self.n_servers, self.n_workers)
+        else:
+            # every non-trace process answers through its own des_times
+            arrivals = arrival.des_times(rng, rate, n_requests,
+                                         n_ticks=n_ticks)
         services = self.service.intrinsic(rng, n_requests)
         ops = self.service.ops_of(services)
         n_groups = self.policy.n_groups
@@ -190,8 +222,13 @@ class Simulator:
         req_index_of_id: dict[int, int] = {}
 
         # Inject all arrivals as REQ_AT_SWITCH events (client TX + link).
-        # C-Clone duplicates at the *client*: both copies pay doubled TX cost.
-        dup_at_client = self.policy.name == "c-clone"
+        # Client-duplicating policies (C-Clone, or any registration flagged
+        # client_dup — the same flag FleetSim reads): doubled TX cost.
+        try:
+            dup_at_client = registry.get(
+                self._registered_name or self.policy.name).client_dup
+        except KeyError:           # ad-hoc policy object, never registered
+            dup_at_client = False
         tx = c.client_tx * (2.0 if dup_at_client else 1.0)
         for i in range(n_requests):
             r = Request(

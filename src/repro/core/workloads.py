@@ -220,3 +220,11 @@ def load_to_rate(load: float, service: ServiceProcess, n_servers: int,
     """Offered load (fraction of cluster capacity) → arrival rate (req/µs)."""
     capacity = n_servers * n_workers / service.effective_mean
     return load * capacity
+
+
+def rate_to_load(rate_per_us: float, service: ServiceProcess, n_servers: int,
+                 n_workers: int) -> float:
+    """Arrival rate (req/µs) → offered load (inverse of
+    :func:`load_to_rate`; used to report the effective load of trace-driven
+    arrival schedules)."""
+    return rate_per_us * service.effective_mean / (n_servers * n_workers)

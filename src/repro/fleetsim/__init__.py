@@ -22,7 +22,12 @@ from repro.fleetsim.engine import RunParams, make_params, simulate, simulate_bat
 from repro.fleetsim.metrics import FleetResult, summarize
 from repro.fleetsim.state import FabricSwitch, FleetState, Metrics, init_fleet_state
 from repro.fleetsim.sweep import SweepResult, rack_skew, sweep_grid
-from repro.fleetsim.validate import CrossCheck, cross_validate
+from repro.fleetsim.validate import (
+    CrossCheck,
+    cross_check_scenario,
+    cross_validate,
+    cross_validate_spec,
+)
 
 __all__ = [
     "FleetConfig",
@@ -44,4 +49,6 @@ __all__ = [
     "sweep_grid",
     "CrossCheck",
     "cross_validate",
+    "cross_validate_spec",
+    "cross_check_scenario",
 ]

@@ -10,84 +10,66 @@ serves the whole policy × load × seed grid under ``vmap``.
 from __future__ import annotations
 
 import math
+from collections.abc import Mapping
 from dataclasses import dataclass, replace
 
-from repro.core.workloads import (
-    BimodalService,
-    BoundedParetoService,
-    ExponentialService,
-    ServiceProcess,
+from repro.scenarios import registry
+from repro.scenarios.service import (  # noqa: F401  (re-exported API)
+    SERVICE_BIMODAL,
+    SERVICE_EXPONENTIAL,
+    SERVICE_PARETO,
+    ServiceSpec,
 )
 
-# Policy ids — traced scalars, so one device program sweeps all policies.
-POLICY_BASELINE = 0
-POLICY_CCLONE = 1
-POLICY_NETCLONE = 2
-POLICY_RACKSCHED = 3
-POLICY_NCRS = 4
 
-POLICY_IDS = {
-    "baseline": POLICY_BASELINE,
-    "c-clone": POLICY_CCLONE,
-    "netclone": POLICY_NETCLONE,
-    "racksched": POLICY_RACKSCHED,
-    "netclone+racksched": POLICY_NCRS,
-}
-POLICY_NAMES = {v: k for k, v in POLICY_IDS.items()}
+class _PolicyIdView(Mapping):
+    """Live ``name → id`` view of the unified policy registry.
 
-SERVICE_EXPONENTIAL = "exponential"
-SERVICE_BIMODAL = "bimodal"
-SERVICE_PARETO = "pareto"
-
-
-@dataclass(frozen=True)
-class ServiceSpec:
-    """Hashable, array-free description of a service-time process.
-
-    Mirrors ``repro.core.workloads``: ``intrinsic`` demand is drawn per
-    request (shared by both copies of a clone pair), execution noise + the
-    jitter spike are drawn independently per execution.
+    Registering a policy (``repro.scenarios.registry.register``) makes it
+    appear here immediately — and duplicate names or ids raise at
+    registration instead of silently overwriting the reverse map.
     """
 
-    kind: str
-    params: tuple[float, ...]
-    jitter_p: float = 0.01
-    jitter_mult: float = 15.0
-    mean: float = 0.0           # pre-jitter mean, for load normalisation
+    def __getitem__(self, name: str) -> int:
+        return registry.policy_id_map()[name]
 
-    @property
-    def effective_mean(self) -> float:
-        return self.mean * (1.0 + self.jitter_p * (self.jitter_mult - 1.0))
+    def __iter__(self):
+        return iter(registry.policy_id_map())
 
-    @classmethod
-    def exponential(cls, mean: float = 25.0, **kw) -> "ServiceSpec":
-        return cls(SERVICE_EXPONENTIAL, (float(mean),), mean=float(mean), **kw)
+    def __len__(self):
+        return len(registry.policy_id_map())
 
-    @classmethod
-    def bimodal(cls, short: float = 25.0, long: float = 250.0,
-                p_long: float = 0.10, **kw) -> "ServiceSpec":
-        mean = (1 - p_long) * short + p_long * long
-        return cls(SERVICE_BIMODAL, (float(short), float(long), float(p_long)),
-                   mean=float(mean), **kw)
+    def __repr__(self):
+        return repr(registry.policy_id_map())
 
-    @classmethod
-    def pareto(cls, xm: float = 10.0, alpha: float = 1.2,
-               cap: float = 1000.0, **kw) -> "ServiceSpec":
-        mean = BoundedParetoService(xm, alpha, cap).mean
-        return cls(SERVICE_PARETO, (float(xm), float(alpha), float(cap)),
-                   mean=float(mean), **kw)
 
-    @classmethod
-    def from_process(cls, svc: ServiceProcess) -> "ServiceSpec":
-        """Map a DES service process onto its array-form spec."""
-        kw = dict(jitter_p=svc.jitter_p, jitter_mult=svc.jitter_mult)
-        if isinstance(svc, ExponentialService):
-            return cls.exponential(svc.mean, **kw)
-        if isinstance(svc, BimodalService):
-            return cls.bimodal(svc.short, svc.long, svc.p_long, **kw)
-        if isinstance(svc, BoundedParetoService):
-            return cls.pareto(svc.xm, svc.alpha, svc.cap, **kw)
-        raise TypeError(f"no fleetsim mapping for {type(svc).__name__}")
+class _PolicyNameView(Mapping):
+    """Live ``id → name`` reverse view of the registry."""
+
+    def __getitem__(self, policy_id: int) -> str:
+        return registry.policy_name_map()[policy_id]
+
+    def __iter__(self):
+        return iter(registry.policy_name_map())
+
+    def __len__(self):
+        return len(registry.policy_name_map())
+
+    def __repr__(self):
+        return repr(registry.policy_name_map())
+
+
+POLICY_IDS = _PolicyIdView()
+POLICY_NAMES = _PolicyNameView()
+
+# Builtin ids — derived from the registry at import so they cannot drift
+# from the registrations in core.policies; kept as module constants for
+# call sites and notebooks that want a concrete int.
+POLICY_BASELINE = POLICY_IDS["baseline"]
+POLICY_CCLONE = POLICY_IDS["c-clone"]
+POLICY_NETCLONE = POLICY_IDS["netclone"]
+POLICY_RACKSCHED = POLICY_IDS["racksched"]
+POLICY_NCRS = POLICY_IDS["netclone+racksched"]
 
 
 @dataclass(frozen=True)
@@ -124,6 +106,10 @@ class FleetConfig:
     n_ticks: int = 50_000
     warmup_frac: float = 0.1
     service: ServiceSpec = ServiceSpec.exponential(25.0)
+    # arrival-process kind: "poisson" draws per-tick counts device-side from
+    # the run's rate + seed; "trace" replays the per-tick count sequence
+    # passed in ``RunParams.arrival_counts`` (see repro.scenarios.arrival)
+    arrival: str = "poisson"
     # switch tables.  The prototype's 2×2^17 slots bound collisions for
     # millions of in-flight ids; a simulated rack keeps O(100) fingerprints
     # live, so far smaller tables preserve the collision behaviour while
@@ -165,6 +151,8 @@ class FleetConfig:
             raise ValueError("n_dedup_slots must be a power of two")
         if self.filter_backend not in ("vectorized", "scan", "pallas"):
             raise ValueError(f"unknown filter_backend {self.filter_backend!r}")
+        if self.arrival not in ("poisson", "trace"):
+            raise ValueError(f"unknown arrival kind {self.arrival!r}")
         if self.n_servers < 2:
             raise ValueError("fleetsim requires at least two servers per rack")
         # req ids ride in float32 payload lanes; keep them exactly

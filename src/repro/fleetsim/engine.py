@@ -61,13 +61,13 @@ from repro.core.switch_jax import (
     group_pairs_array,
 )
 from repro.fleetsim.config import (
-    POLICY_CCLONE,
     SERVICE_BIMODAL,
     SERVICE_EXPONENTIAL,
     SERVICE_PARETO,
     FleetConfig,
 )
-from repro.fleetsim.policies import dedup_tick, route_fabric
+from repro.fleetsim.policies import dedup_tick, id_mask, route_fabric
+from repro.scenarios import registry
 from repro.fleetsim.state import (
     QF,
     QF_BASE,
@@ -103,6 +103,9 @@ class RunParams(NamedTuple):
     rack_weights: jax.Array   # (n_racks,) f32 — arrival-skew weights
     fail_from_tick: jax.Array  # () int32 — fabric dark from this tick …
     fail_until_tick: jax.Array  # () int32 — … until this tick (then wiped)
+    # per-tick arrival counts for cfg.arrival == "trace" (shape (n_ticks,));
+    # (0,) for Poisson runs, whose counts the device draws itself
+    arrival_counts: jax.Array
 
 
 def check_fabric_arrays(cfg: FleetConfig, slowdown=None, rack_weights=None,
@@ -127,10 +130,31 @@ def check_fabric_arrays(cfg: FleetConfig, slowdown=None, rack_weights=None,
     return slowdown, rack_weights
 
 
+def check_arrival_counts(cfg: FleetConfig, arrival_counts) -> np.ndarray:
+    """Default + shape-check the per-tick trace counts: ``(n_ticks,)`` for
+    trace runs, empty for Poisson (whose counts the device draws)."""
+    if cfg.arrival == "trace":
+        if arrival_counts is None:
+            raise ValueError('cfg.arrival == "trace" needs arrival_counts '
+                             "(see repro.scenarios.arrival.TraceArrival)")
+        arrival_counts = np.asarray(arrival_counts, np.int32).reshape(-1)
+        if arrival_counts.shape != (cfg.n_ticks,):
+            raise ValueError(f"arrival_counts must have n_ticks="
+                             f"{cfg.n_ticks} entries, got "
+                             f"{arrival_counts.shape}")
+        return arrival_counts
+    if arrival_counts is not None:
+        raise ValueError("arrival_counts passed but cfg.arrival is "
+                         f"{cfg.arrival!r}")
+    return np.zeros((0,), np.int32)
+
+
 def make_params(cfg: FleetConfig, policy_id: int, rate_per_us: float,
                 seed: int, slowdown=None, rack_weights=None,
-                fail_window: tuple[int, int] | None = None) -> RunParams:
+                fail_window: tuple[int, int] | None = None,
+                arrival_counts=None) -> RunParams:
     slowdown, rack_weights = check_fabric_arrays(cfg, slowdown, rack_weights)
+    arrival_counts = check_arrival_counts(cfg, arrival_counts)
     f0, f1 = fail_window if fail_window is not None \
         else (cfg.n_ticks + 1, cfg.n_ticks + 1)
     return RunParams(policy_id=jnp.int32(policy_id),
@@ -139,7 +163,8 @@ def make_params(cfg: FleetConfig, policy_id: int, rate_per_us: float,
                      slowdown=jnp.asarray(slowdown, jnp.float32),
                      rack_weights=jnp.asarray(rack_weights, jnp.float32),
                      fail_from_tick=jnp.int32(f0),
-                     fail_until_tick=jnp.int32(f1))
+                     fail_until_tick=jnp.int32(f1),
+                     arrival_counts=jnp.asarray(arrival_counts, jnp.int32))
 
 
 # --------------------------------------------------------------- sampling ---
@@ -192,10 +217,12 @@ def _make_step(cfg: FleetConfig, params: RunParams, group_pairs: jax.Array):
     srv_ids = jnp.arange(ST)
     # in-network constants added to every recorded latency (client TX + four
     # link hops + two pipeline passes + the spine tier's round trip when the
-    # fabric has one; C-Clone pays the doubled sender cost)
+    # fabric has one; client-duplicating policies — C-Clone and any custom
+    # registration flagged client_dup — pay the doubled sender cost)
     const_lat = (cfg.client_tx_us + 4 * cfg.link_us + 2 * cfg.pipeline_pass_us
                  + cfg.spine_extra_us
-                 + jnp.where(params.policy_id == POLICY_CCLONE,
+                 + jnp.where(id_mask(params.policy_id,
+                                     registry.client_dup_ids()),
                              cfg.client_tx_us, 0.0))
     xhop = jnp.float32(cfg.interrack_extra_us)
     t0_us = jnp.float32(cfg.warmup_us)
@@ -489,24 +516,58 @@ def _filter_responses(cfg, server_state, tables, rid, idx, clo, sid, qlen,
 
 
 # ------------------------------------------------------------------ runner --
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def simulate(cfg: FleetConfig, params: RunParams) -> Metrics:
-    """Run one fabric for ``cfg.n_ticks`` ticks; fully jitted."""
+def _simulate_core(cfg: FleetConfig, params: RunParams) -> Metrics:
     gp = group_pairs_array(cfg.n_servers)
     k_pois, k0 = jax.random.split(jax.random.PRNGKey(params.seed))
     state = init_fleet_state(cfg, k0)
     step = _make_step(cfg, params, gp)
     ticks = jnp.arange(cfg.n_ticks, dtype=jnp.int32)
-    # per-tick Poisson arrival counts, drawn once outside the scan
-    n_raw = jax.random.poisson(
-        k_pois, params.rate_per_us * cfg.dt_us, (cfg.n_ticks,)
-    ).astype(jnp.int32)
+    if cfg.arrival == "trace":
+        # replayed per-tick arrival counts ride in as the scan xs
+        n_raw = params.arrival_counts.astype(jnp.int32)
+    else:
+        # per-tick Poisson arrival counts, drawn once outside the scan
+        n_raw = jax.random.poisson(
+            k_pois, params.rate_per_us * cfg.dt_us, (cfg.n_ticks,)
+        ).astype(jnp.int32)
     state, _ = jax.lax.scan(step, state, (ticks, n_raw))
     return state.metrics
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
+# The compiled programs bake in the registry's branch tables, so the jit
+# cache is additionally keyed on registry.version(): registering a policy
+# after a compile forces a retrace with the grown lax.switch table instead
+# of silently reusing a stale executable.
+@functools.partial(jax.jit, static_argnames=("cfg", "registry_version"))
+def _simulate_jit(cfg: FleetConfig, registry_version: int,
+                  params: RunParams) -> Metrics:
+    return _simulate_core(cfg, params)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "registry_version"))
+def _simulate_batch_jit(cfg: FleetConfig, registry_version: int,
+                        params: RunParams) -> Metrics:
+    return jax.vmap(lambda p: _simulate_core(cfg, p))(params)
+
+
+def simulate(cfg: FleetConfig, params: RunParams) -> Metrics:
+    """Run one fabric for ``cfg.n_ticks`` ticks; fully jitted."""
+    return _simulate_jit(cfg, registry.version(), params)
+
+
 def simulate_batch(cfg: FleetConfig, params: RunParams) -> Metrics:
     """vmapped :func:`simulate` — ``params`` fields carry a leading sweep
     axis; one device program advances every configuration in lock-step."""
-    return jax.vmap(lambda p: simulate(cfg, p))(params)
+    return _simulate_batch_jit(cfg, registry.version(), params)
+
+
+def lower_run(cfg: FleetConfig, params: RunParams):
+    """``jit(...).lower`` for the single-run entry point (scenario runners
+    report compile time separately from steady-state wall clock)."""
+    return _simulate_jit.lower(cfg, registry.version(), params)
+
+
+def lower_batch(cfg: FleetConfig, params: RunParams):
+    """``jit(...).lower`` for the batch runner (sweeps report compile time
+    separately from steady-state wall clock)."""
+    return _simulate_batch_jit.lower(cfg, registry.version(), params)

@@ -7,24 +7,25 @@ where do the copies go, and with what CLO marking.  The NetClone branch is the
 StateT/ShadowT idle-idle read, requests never writing server state); the
 others are the array transliterations of their DES counterparts.
 
-``route`` multiplexes the branches with ``lax.switch`` on a *traced* policy
-id, which is what lets one jitted program sweep every policy: under ``vmap``
+The branches are **attached to the unified policy registry**
+(``repro.scenarios.registry``) against the entries ``core.policies``
+registered, and the ``lax.switch`` tables in :func:`route` /
+:func:`route_fabric` are built from the registry at trace time — so a policy
+registered once (even from an example script) is routable here with no
+engine edit.  ``route`` multiplexes the branches on a *traced* policy id,
+which is what lets one jitted program sweep every policy: under ``vmap``
 each sweep lane takes its own branch.
 """
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from repro.core.header import CLO_CLONE, CLO_NONE, CLO_ORIG
-from repro.fleetsim.config import (
-    POLICY_BASELINE,
-    POLICY_CCLONE,
-    POLICY_NCRS,
-    POLICY_NETCLONE,
-    POLICY_RACKSCHED,
-)
+from repro.scenarios import registry
 
 
 def _no_clone(dst, a):
@@ -74,13 +75,44 @@ def _route_ncrs(server_state, pair, r1, r2):
     return dst1, s2, cloned, clo1, clo2
 
 
-_BRANCHES = {
-    POLICY_BASELINE: _route_baseline,
-    POLICY_CCLONE: _route_cclone,
-    POLICY_NETCLONE: _route_netclone,
-    POLICY_RACKSCHED: _route_racksched,
-    POLICY_NCRS: _route_ncrs,
-}
+# attach the array branches to the registry entries core.policies created —
+# a policy now lives in ONE table shared by both engines
+registry.attach_route("baseline", _route_baseline)
+registry.attach_route("c-clone", _route_cclone)
+registry.attach_route("netclone", _route_netclone)
+registry.attach_route("racksched", _route_racksched)
+registry.attach_route("netclone+racksched", _route_ncrs)
+
+
+def default_spine_place(rack_load, server_state, home, r1, r2, remote_cand,
+                        *, n_racks, n_servers):
+    """Default spine placement (§3.7): the remote member of a cross-rack
+    pair is the lane's uniform candidate ``remote_cand`` (a local server
+    id) in the least-loaded rack other than home.  Reusing the per-lane
+    random candidate rather than the remote rack's argmin keeps the clone
+    volume self-throttling and avoids herding every lane of a tick onto
+    one server under one-tick-stale state, exactly like the in-rack pair
+    sampling."""
+    big = jnp.int32(1 << 24)
+    masked = rack_load[None, :] + jnp.where(
+        home[:, None] == jnp.arange(n_racks)[None, :], big, 0)
+    r_star = jnp.argmin(masked, axis=1).astype(jnp.int32)     # (A,)
+    return r_star * n_servers + remote_cand
+
+
+def _spine_branches(n_racks, n_servers):
+    """Per-policy spine placement table, sorted by id (registry hook or the
+    default least-loaded placement)."""
+    return [functools.partial(p or default_spine_place,
+                              n_racks=n_racks, n_servers=n_servers)
+            for p in registry.spine_placements()]
+
+
+def id_mask(policy_id: jax.Array, ids: tuple[int, ...]) -> jax.Array:
+    """Traced membership test of ``policy_id`` in a static id tuple."""
+    return functools.reduce(
+        jnp.logical_or, [policy_id == i for i in ids],
+        jnp.zeros((), bool))
 
 
 def route(policy_id: jax.Array, server_state: jax.Array, pair: jax.Array,
@@ -91,10 +123,11 @@ def route(policy_id: jax.Array, server_state: jax.Array, pair: jax.Array,
     is the GrpT lookup for the pair-based policies (``group_pairs[grp]``,
     already offset into global server ids by the caller when the fabric has
     more than one rack).  Returns ``(dst1, dst2, cloned, clo1, clo2)``
-    arrays of shape (A,).
+    arrays of shape (A,).  The branch table comes from the registry, so it
+    includes every policy registered at trace time.
     """
-    branches = [_BRANCHES[i] for i in sorted(_BRANCHES)]
-    return jax.lax.switch(policy_id, branches, server_state, pair, r1, r2)
+    return jax.lax.switch(policy_id, registry.route_branches(),
+                          server_state, pair, r1, r2)
 
 
 def route_fabric(policy_id: jax.Array, server_state: jax.Array,
@@ -107,18 +140,15 @@ def route_fabric(policy_id: jax.Array, server_state: jax.Array,
     ``server_state`` is the flattened ``(n_racks * n_servers,)`` tracked
     queue lengths.  Each lane first takes its home rack switch's ordinary
     :func:`route` decision over local candidates.  With more than one rack,
-    the spine then upgrades NetClone-style lanes that could *not* clone
-    locally: when the home rack has no tracked-idle server, the spine forms
-    a *cross-rack pair* — the lane's first local candidate plus the lane's
-    uniform candidate ``remote_cand`` (a per-lane local server id) in the
-    least-loaded remote rack (§3.7 — the spine aggregates per-rack load from
-    the same piggybacked responses the rack switches see) — and applies the
-    same tracked-idle predicate to the remote member before placing the
-    CLO=2 copy on it.  Reusing the per-lane random candidate rather than the
-    remote rack's argmin keeps the clone volume self-throttling and avoids
-    herding every lane of a tick onto one server under one-tick-stale state,
-    exactly like the in-rack pair sampling.  Such pairs are later filtered
-    at the spine, the only switch both responses cross.
+    the spine then upgrades lanes of ``spine_clone`` policies that could
+    *not* clone locally: when the home rack has no tracked-idle server, the
+    spine forms a *cross-rack pair* — the lane's first local candidate plus
+    a remote member chosen by the policy's registered spine placement
+    (default: :func:`default_spine_place`, the least-loaded remote rack;
+    the spine aggregates per-rack load from the same piggybacked responses
+    the rack switches see) — and applies the same tracked-idle predicate to
+    the remote member before placing the CLO=2 copy on it.  Such pairs are
+    later filtered at the spine, the only switch both responses cross.
 
     Returns ``(dst1, dst2, cloned, clo1, clo2)``; the caller derives the
     inter-rack mask as ``cloned & (dst1 // n_servers != dst2 // n_servers)``.
@@ -131,13 +161,10 @@ def route_fabric(policy_id: jax.Array, server_state: jax.Array,
     per_rack = server_state.reshape(n_racks, n_servers)
     rack_load = per_rack.sum(axis=1)              # spine's aggregated view
     rack_min = per_rack.min(axis=1)
-    # least-loaded rack other than home, per lane
-    big = jnp.int32(1 << 24)
-    masked = rack_load[None, :] + jnp.where(
-        home_rack[:, None] == jnp.arange(n_racks)[None, :], big, 0)
-    r_star = jnp.argmin(masked, axis=1).astype(jnp.int32)     # (A,)
-    remote = r_star * n_servers + remote_cand    # cross-rack pair member
-    wants_clone = (policy_id == POLICY_NETCLONE) | (policy_id == POLICY_NCRS)
+    remote = jax.lax.switch(
+        policy_id, _spine_branches(n_racks, n_servers),
+        rack_load, server_state, home_rack, r1, r2, remote_cand)
+    wants_clone = id_mask(policy_id, registry.spine_clone_ids())
     xclone = (wants_clone & ~cloned
               & (rack_min[home_rack] > 0)        # home rack saturated
               & (server_state[remote] == 0))     # remote member tracked-idle

@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.core.workloads import ServiceProcess, load_to_rate
 from repro.fleetsim.config import POLICY_IDS, FleetConfig, ServiceSpec
-from repro.fleetsim.engine import RunParams, check_fabric_arrays, simulate_batch
+from repro.fleetsim.engine import RunParams, check_fabric_arrays, lower_batch
 from repro.fleetsim.metrics import FleetResult, summarize
 
 
@@ -77,6 +77,7 @@ def sweep_grid(
     slowdown: np.ndarray | None = None,
     rack_weights: np.ndarray | None = None,
     fail_window_ticks: tuple[int, int] | None = None,
+    resize_arrival_lanes: bool = True,
     **cfg_kw,
 ) -> SweepResult:
     """Run every (policy, load, seed) combination in one jitted program.
@@ -86,9 +87,12 @@ def sweep_grid(
     (shape ``(n_racks,)``) skews the arrival mix toward hot racks (see
     :func:`rack_skew` for the canonical one-hot-rack / one-straggler-rack
     scenario); ``fail_window_ticks`` darkens the fabric over ``[t0, t1)``
-    ticks and wipes its soft state at recovery, for all runs.  Returns
-    host-side results plus wall-clock accounting (compile time reported
-    separately so sweep cost is judged on the steady-state number).
+    ticks and wipes its soft state at recovery, for all runs.
+    ``resize_arrival_lanes=False`` keeps ``cfg.max_arrivals`` exactly as
+    given (pinned array shapes — e.g. golden scenarios) instead of applying
+    Poisson headroom for the hottest load.  Returns host-side results plus
+    wall-clock accounting (compile time reported separately so sweep cost
+    is judged on the steady-state number).
     """
     spec = _as_spec(service)
     if cfg is None:
@@ -98,6 +102,9 @@ def sweep_grid(
             raise ValueError("pass either cfg or cfg overrides, not both")
         if cfg.service != spec:
             raise ValueError("cfg.service disagrees with the service argument")
+    if cfg.arrival != "poisson":
+        raise ValueError("sweep_grid sweeps Poisson load grids; run trace "
+                         "scenarios through repro.scenarios (run_scenarios)")
     if not policies or not loads or not seeds:
         raise ValueError("sweep_grid needs at least one policy, load, and "
                          "seed (got "
@@ -108,7 +115,8 @@ def sweep_grid(
 
     rates = {ld: load_to_rate(ld, spec, cfg.n_servers_total, cfg.n_workers)
              for ld in loads}
-    cfg = cfg.with_arrival_headroom(max(rates.values()))
+    if resize_arrival_lanes:
+        cfg = cfg.with_arrival_headroom(max(rates.values()))
 
     slowdown, rack_weights = check_fabric_arrays(cfg, slowdown, rack_weights)
 
@@ -125,11 +133,12 @@ def sweep_grid(
         rack_weights=np.broadcast_to(rack_weights, (g, cfg.n_racks)).copy(),
         fail_from_tick=np.full(g, f0, np.int32),
         fail_until_tick=np.full(g, f1, np.int32),
+        arrival_counts=np.zeros((g, 0), np.int32),
     )
     params = jax.tree.map(lambda a: jax.numpy.asarray(a), params)
 
     t0 = time.perf_counter()
-    compiled = simulate_batch.lower(cfg, params).compile()
+    compiled = lower_batch(cfg, params).compile()
     t_compile = time.perf_counter() - t0
     t0 = time.perf_counter()
     metrics = jax.block_until_ready(compiled(params))

@@ -128,6 +128,70 @@ def _filter_frac(n_filtered: int, n_cloned: int) -> float:
     return n_filtered / n_cloned if n_cloned else 0.0
 
 
+def _check_from(policy: str, load: float, des, fr: FleetResult) -> CrossCheck:
+    """Assemble one CrossCheck from a DES result + a FleetResult."""
+    return CrossCheck(
+        policy=policy, load=load,
+        des_p50=des.p50_us, fleet_p50=fr.p50_us,
+        des_p99=des.p99_us, fleet_p99=fr.p99_us,
+        des_clone_frac=des.n_cloned / des.n_requests,
+        fleet_clone_frac=fr.clone_fraction,
+        des_filter_frac=_filter_frac(des.n_filtered, des.n_cloned),
+        fleet_filter_frac=_filter_frac(fr.n_filtered, fr.n_cloned),
+        des_goodput=des.throughput_mrps / des.offered_rate_mrps,
+        fleet_goodput=fr.throughput_mrps / fr.offered_rate_mrps,
+        fleet_overflow_frac=fr.n_overflow / max(fr.n_arrivals, 1),
+        effective_util=load * (1.0 + (des.n_cloned - des.n_clone_drops)
+                               / des.n_requests),
+    )
+
+
+def cross_check_scenario(scenario, n_requests: int | None = None,
+                         n_ticks: int | None = None) -> CrossCheck:
+    """Cross-validate one :class:`repro.scenarios.Scenario` — the same
+    frozen object drives both engines (comparison-by-construction), so this
+    covers trace-replay scenarios too."""
+    fr = scenario.run_fleetsim(**({"n_ticks": n_ticks} if n_ticks else {}))
+    des = scenario.run_des(n_requests=n_requests, n_ticks=n_ticks)
+    nt = n_ticks or scenario.n_ticks
+    return _check_from(scenario.policy, scenario.effective_load(nt), des, fr)
+
+
+def cross_validate_spec(spec, n_requests: int = 20_000,
+                        n_ticks: int | None = None) -> list[CrossCheck]:
+    """Cross-validate a declarative :class:`repro.scenarios.SweepSpec`.
+
+    The whole Poisson grid runs through one vmapped device program; each
+    cell's DES replay uses the *same scenario seed*, so the comparison is
+    knob-for-knob.  ``n_ticks`` defaults to admitting ``n_requests`` at the
+    sweep's lowest load.
+    """
+    from repro.core.workloads import load_to_rate
+
+    base = spec.base
+    if base.racks != 1:
+        raise ValueError("cross-validation requires racks == 1 "
+                         "(the DES is single-ToR)")
+    if base.arrival.kind != "poisson":
+        raise ValueError("cross_validate_spec sweeps Poisson load grids; "
+                         "cross-check trace scenarios one at a time with "
+                         "cross_check_scenario")
+    if n_ticks is None:
+        min_rate = min(load_to_rate(ld, base.service, base.servers,
+                                    base.workers)
+                       for ld in spec.resolved_loads())
+        n_ticks = int(n_requests / min_rate) + 1
+    fleet = spec.run_fleetsim(n_ticks=n_ticks)
+    checks = []
+    for sc in spec.scenarios():
+        des = sc.run_des(n_requests=n_requests, n_ticks=n_ticks)
+        fr = [r for r in fleet.results
+              if r.policy == sc.policy and r.seed == sc.seed
+              and abs(r.offered_load - sc.load) < 1e-9][0]
+        checks.append(_check_from(sc.policy, sc.load, des, fr))
+    return checks
+
+
 def cross_validate(
     service: ServiceProcess,
     policies: list[str],
@@ -169,21 +233,7 @@ def cross_validate(
                             seed=seed + 1000 * li).run(
                 offered_load=load, n_requests=n_requests)
             fr: FleetResult = fleet.select(policy=policy, load=load)[0]
-            checks.append(CrossCheck(
-                policy=policy, load=load,
-                des_p50=des.p50_us, fleet_p50=fr.p50_us,
-                des_p99=des.p99_us, fleet_p99=fr.p99_us,
-                des_clone_frac=des.n_cloned / des.n_requests,
-                fleet_clone_frac=fr.clone_fraction,
-                des_filter_frac=_filter_frac(des.n_filtered, des.n_cloned),
-                fleet_filter_frac=_filter_frac(fr.n_filtered, fr.n_cloned),
-                des_goodput=des.throughput_mrps / des.offered_rate_mrps,
-                fleet_goodput=fr.throughput_mrps / fr.offered_rate_mrps,
-                fleet_overflow_frac=fr.n_overflow / max(fr.n_arrivals, 1),
-                effective_util=load * (1.0 + (des.n_cloned
-                                              - des.n_clone_drops)
-                                       / des.n_requests),
-            ))
+            checks.append(_check_from(policy, load, des, fr))
     return checks
 
 
@@ -192,30 +242,40 @@ def main(argv: list[str] | None = None) -> int:
 
         PYTHONPATH=src python -m repro.fleetsim.validate [--requests N]
 
-    Runs every overlapping (policy, load) point through both engines and
-    exits non-zero if any point breaks the documented tolerances.
+    Scenario-file driven: ``--grid`` names a SweepSpec file whose
+    ``policies="registered"`` default expands to *every* policy registered
+    for both engines (custom registrations included), and ``--trace`` names
+    a TraceArrival scenario replayed through both engines.  Exits non-zero
+    if any point breaks the documented tolerances.
     """
     import argparse
 
-    from repro.core.workloads import ExponentialService
+    from repro.scenarios.spec import Scenario, SweepSpec
 
     ap = argparse.ArgumentParser(description=main.__doc__)
     ap.add_argument("--requests", type=int, default=20_000,
                     help="DES requests per (policy, load) point")
-    ap.add_argument("--policies", nargs="*",
-                    default=["baseline", "c-clone", "netclone", "racksched",
-                             "netclone+racksched"])
-    ap.add_argument("--loads", nargs="*", type=float,
-                    default=[0.2, 0.5, 0.8])
-    ap.add_argument("--servers", type=int, default=4)
-    ap.add_argument("--workers", type=int, default=8)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--grid", default="validate_grid",
+                    help="SweepSpec JSON (path or bundled library name); "
+                         "'none' skips the grid check")
+    ap.add_argument("--trace", default="trace_burst",
+                    help="TraceArrival scenario JSON (path or bundled "
+                         "name); 'none' skips the trace check")
+    ap.add_argument("--trace-ticks", type=int, default=None,
+                    help="override the trace scenario's n_ticks")
     args = ap.parse_args(argv)
 
-    checks = cross_validate(
-        ExponentialService(25.0), args.policies, args.loads,
-        n_servers=args.servers, n_workers=args.workers,
-        n_requests=args.requests, seed=args.seed)
+    checks = []
+    if args.grid != "none":
+        spec = SweepSpec.from_file(args.grid)
+        print(f"== grid {args.grid}: {spec.resolved_policies()} x "
+              f"{spec.resolved_loads()} ==")
+        checks = cross_validate_spec(spec, n_requests=args.requests)
+    if args.trace != "none":
+        sc = Scenario.from_file(args.trace)
+        print(f"== trace {args.trace}: {sc.policy}, "
+              f"{args.trace_ticks or sc.n_ticks} ticks ==")
+        checks.append(cross_check_scenario(sc, n_ticks=args.trace_ticks))
     n_ok = 0
     for c in checks:
         n_ok += c.ok

@@ -1,0 +1,53 @@
+"""One Scenario API: policy registry, arrival processes, scenario files.
+
+The package has three layers:
+
+* :mod:`repro.scenarios.registry` — the unified policy registry.  A policy
+  is registered once (name, stable int id, DES factory, array-form route /
+  spine hooks) and enters both engines and every sweep;
+* :mod:`repro.scenarios.service` / :mod:`repro.scenarios.arrival` — the
+  declarative workload pieces: one :class:`ServiceSpec` for both engines,
+  pluggable :class:`ArrivalProcess` (Poisson, trace replay);
+* :mod:`repro.scenarios.spec` — the frozen :class:`Scenario` dataclass and
+  :class:`SweepSpec` grid with JSON round-trip, consumed by
+  ``core.simulator`` and ``fleetsim`` alike.  Imported lazily here: it
+  pulls in the engines, while this ``__init__`` stays import-light so
+  ``core``/``fleetsim`` modules can import the registry without cycles.
+
+``python -m repro.scenarios --list`` lists policies and bundled scenario
+files; ``python -m repro.scenarios NAME_OR_PATH`` runs one end-to-end.
+"""
+
+from repro.scenarios import registry
+from repro.scenarios.arrival import (
+    ArrivalProcess,
+    PoissonArrival,
+    TraceArrival,
+    arrival_from_json,
+)
+from repro.scenarios.registry import DuplicatePolicyError, PolicyDef, register
+from repro.scenarios.service import ServiceSpec
+
+_LAZY = ("Scenario", "SweepSpec", "run_scenarios", "scenario_library",
+         "load_any")
+
+__all__ = [
+    "registry",
+    "register",
+    "PolicyDef",
+    "DuplicatePolicyError",
+    "ServiceSpec",
+    "ArrivalProcess",
+    "PoissonArrival",
+    "TraceArrival",
+    "arrival_from_json",
+    *_LAZY,
+]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.scenarios import spec
+
+        return getattr(spec, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,301 @@
+"""Unified policy registry — one registration, every engine, every sweep.
+
+A policy is registered **once** with a name, a stable dense int id (for the
+array engine's ``lax.switch`` branch table), a DES :class:`SwitchPolicy`
+factory, and — attached by ``repro.fleetsim.policies`` — an array-form
+``route`` branch plus optional spine-placement hooks.  Everything downstream
+derives from this table:
+
+* ``repro.core.policies.make_policy`` builds DES policies from it;
+* ``repro.fleetsim.config.POLICY_IDS`` / ``POLICY_NAMES`` are *live views*
+  of it, so registering a custom policy (e.g. a spine-placement variant in
+  ``examples/``) automatically enters it into both engines, every
+  :class:`~repro.scenarios.spec.SweepSpec` with ``policies="registered"``,
+  and the ``validate`` cross-checks;
+* the FleetSim branch tables (``route``, spine placement, client-dup TX)
+  are rebuilt from it at trace time, keyed on :func:`version` so a new
+  registration invalidates stale compiled programs.
+
+Duplicate names or ids raise :class:`DuplicatePolicyError` — previously a
+collision silently overwrote the reverse map.
+
+This module is import-light on purpose (no jax, no engine imports); the
+builtin registrations live with their implementations and are pulled in
+lazily by the accessors in two tiers — name/id/flag accessors load only
+``repro.core.policies`` (numpy-only, so the DES never pays the jax import),
+while the route-table accessors additionally load
+``repro.fleetsim.policies`` — which keeps ``core`` ↔ ``fleetsim`` free of
+import cycles.
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass, replace
+from typing import Any, Callable
+
+__all__ = [
+    "DuplicatePolicyError",
+    "PolicyDef",
+    "register",
+    "attach_route",
+    "remove",
+    "get",
+    "route_of",
+    "names",
+    "array_policies",
+    "two_engine_names",
+    "policy_id_map",
+    "policy_name_map",
+    "route_branches",
+    "spine_placements",
+    "spine_clone_ids",
+    "client_dup_ids",
+    "version",
+]
+
+
+class DuplicatePolicyError(ValueError):
+    """A policy name or id was registered twice."""
+
+
+@dataclass(frozen=True)
+class PolicyDef:
+    """One policy, as seen by every engine.
+
+    ``policy_id`` is the dense int the array engine switches on (``None``
+    for DES-only policies such as LÆDGE or hedging, which need a
+    coordinator node or per-request timers the array engine does not
+    model).  ``des`` builds the DES ``SwitchPolicy``; ``route`` is the
+    array-form branch ``(server_state, pair, r1, r2) -> (dst1, dst2,
+    cloned, clo1, clo2)``.  ``spine_clone`` marks policies whose saturated
+    lanes the spine may upgrade to inter-rack clones (§3.7), with
+    ``spine_place(rack_load, server_state, home, r1, r2, remote_cand, *,
+    n_racks, n_servers)`` overriding the default least-loaded-rack
+    placement.  ``client_dup`` marks client-side duplication (the sender
+    pays doubled TX cost, as C-Clone does).
+    """
+
+    name: str
+    policy_id: int | None = None
+    des: Callable[..., Any] | None = None
+    route: Callable | None = None
+    spine_clone: bool = False
+    spine_place: Callable | None = None
+    client_dup: bool = False
+    description: str = ""
+
+
+_REGISTRY: dict[str, PolicyDef] = {}
+_VERSION = 0
+# builtin registrations (names, ids, DES factories, flags) — numpy-only
+_CORE_MODULE = "repro.core.policies"
+# builtin array branches — pulls in jax; only loaded for route accessors
+_ROUTE_MODULE = "repro.fleetsim.policies"
+_loading = False
+
+
+def _bump() -> None:
+    global _VERSION
+    _VERSION += 1
+
+
+def _import_guarded(mod: str) -> None:
+    global _loading
+    if _loading:
+        return
+    _loading = True
+    try:
+        importlib.import_module(mod)
+    finally:
+        _loading = False
+
+
+def _ensure_builtins() -> None:
+    """Load the builtin registrations (idempotent; re-entrant imports
+    during their own load are no-ops).  Deliberately does NOT import the
+    fleetsim branch module, so DES-only consumers stay numpy-only — see
+    :func:`_ensure_routes` for the jax tier."""
+    _import_guarded(_CORE_MODULE)
+
+
+def _ensure_routes() -> None:
+    """Additionally load the builtin array branches (imports jax)."""
+    _ensure_builtins()
+    _import_guarded(_ROUTE_MODULE)
+
+
+def register(
+    name: str,
+    *,
+    policy_id: int | None = None,
+    des: Callable[..., Any] | None = None,
+    route: Callable | None = None,
+    spine_clone: bool = False,
+    spine_place: Callable | None = None,
+    client_dup: bool = False,
+    description: str = "",
+) -> PolicyDef:
+    """Register a policy under a unique name (and unique id, if array-form).
+
+    Raises :class:`DuplicatePolicyError` on name or id collision instead of
+    silently overwriting either direction of the map.
+    """
+    # load the builtin table first so a user registration collides *here*,
+    # at its own call site, rather than poisoning the later builtin import.
+    # The builtins' own register() calls must skip this: while their module
+    # is mid-import it is already in sys.modules, and re-importing it (or
+    # the route module, which attaches to entries not yet registered) would
+    # re-enter a half-initialized table.
+    import sys
+
+    if _CORE_MODULE not in sys.modules:
+        _ensure_builtins()
+    if name in _REGISTRY:
+        raise DuplicatePolicyError(f"policy {name!r} is already registered")
+    if policy_id is not None:
+        taken = {d.policy_id: d.name for d in _REGISTRY.values()
+                 if d.policy_id is not None}
+        if policy_id in taken:
+            raise DuplicatePolicyError(
+                f"policy id {policy_id} is already registered "
+                f"to {taken[policy_id]!r}")
+        if policy_id < 0:
+            raise ValueError("policy_id must be non-negative")
+    d = PolicyDef(name=name, policy_id=policy_id, des=des, route=route,
+                  spine_clone=spine_clone, spine_place=spine_place,
+                  client_dup=client_dup, description=description)
+    _REGISTRY[name] = d
+    _bump()
+    return d
+
+
+def attach_route(name: str, route: Callable, *,
+                 spine_place: Callable | None = None) -> PolicyDef:
+    """Attach (or replace) the array-form branch of an existing policy.
+
+    Used by ``repro.fleetsim.policies`` to add the engine branches to
+    policies whose DES side registered first; the policy must already carry
+    an id.
+    """
+    _ensure_builtins()
+    d = get(name)
+    if d.policy_id is None:
+        raise ValueError(f"policy {name!r} has no policy_id; register it "
+                         "with one before attaching an array branch")
+    d = replace(d, route=route,
+                spine_place=spine_place if spine_place is not None
+                else d.spine_place)
+    _REGISTRY[name] = d
+    _bump()
+    return d
+
+
+def remove(name: str) -> None:
+    """Unregister a policy (intended for tests and example teardown — the
+    builtin table is append-only in normal use).  Refuses to punch a hole
+    in the dense id range: remove higher ids first."""
+    _ensure_builtins()
+    if name not in _REGISTRY:
+        raise KeyError(name)
+    pid = _REGISTRY[name].policy_id
+    if pid is not None:
+        higher = [d.name for d in _REGISTRY.values()
+                  if d.policy_id is not None and d.policy_id > pid]
+        if higher:
+            raise ValueError(
+                f"removing {name!r} (id {pid}) would leave an id hole "
+                f"below {higher} and break the lax.switch branch table; "
+                "remove higher ids first")
+    del _REGISTRY[name]
+    _bump()
+
+
+def route_of(name: str) -> Callable:
+    """The array route branch of a registered policy (loads the jax branch
+    tier first, so it is safe in any import order) — for custom
+    registrations that reuse a builtin's in-rack behaviour."""
+    _ensure_routes()
+    r = get(name).route
+    if r is None:
+        raise ValueError(f"policy {name!r} has no array route branch")
+    return r
+
+
+def get(name: str) -> PolicyDef:
+    _ensure_builtins()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown policy {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def names() -> list[str]:
+    """All registered policy names (registration order)."""
+    _ensure_builtins()
+    return list(_REGISTRY)
+
+
+def array_policies() -> list[PolicyDef]:
+    """Array-capable policies sorted by id, validated dense ``0..N-1`` (the
+    ``lax.switch`` branch table cannot have holes)."""
+    _ensure_builtins()
+    defs = sorted((d for d in _REGISTRY.values() if d.policy_id is not None),
+                  key=lambda d: d.policy_id)
+    ids = [d.policy_id for d in defs]
+    if ids != list(range(len(ids))):
+        raise ValueError(f"array policy ids must be dense 0..N-1, got {ids}")
+    return defs
+
+
+def two_engine_names() -> list[str]:
+    """Policies runnable through *both* engines (a DES factory and an
+    array id) — the default sweep population."""
+    _ensure_builtins()
+    return [d.name for d in array_policies() if d.des is not None]
+
+
+def policy_id_map() -> dict[str, int]:
+    return {d.name: d.policy_id for d in array_policies()}
+
+
+def policy_name_map() -> dict[int, str]:
+    return {d.policy_id: d.name for d in array_policies()}
+
+
+def route_branches() -> list[Callable]:
+    """The ``lax.switch`` branch table, sorted by id.  Every array policy
+    must have a route attached by the time an engine traces."""
+    _ensure_routes()
+    defs = array_policies()
+    missing = [d.name for d in defs if d.route is None]
+    if missing:
+        raise ValueError(f"array policies without a route branch: {missing}")
+    return [d.route for d in defs]
+
+
+def spine_placements() -> list[Callable | None]:
+    """Per-policy spine placement hooks (``None`` → engine default),
+    sorted by id."""
+    _ensure_routes()
+    return [d.spine_place for d in array_policies()]
+
+
+def spine_clone_ids() -> tuple[int, ...]:
+    """Ids whose saturated lanes the spine may upgrade to inter-rack
+    clones."""
+    return tuple(d.policy_id for d in array_policies() if d.spine_clone)
+
+
+def client_dup_ids() -> tuple[int, ...]:
+    """Ids whose clients transmit both copies themselves (doubled TX)."""
+    return tuple(d.policy_id for d in array_policies() if d.client_dup)
+
+
+def version() -> int:
+    """Monotonic registration counter — engines key their jit caches on it
+    so a post-compile registration forces a retrace with the new branch
+    table."""
+    _ensure_builtins()
+    return _VERSION

@@ -1,0 +1,116 @@
+"""Unified service-time specification shared by the DES and FleetSim.
+
+:class:`ServiceSpec` is the single description of a service-time process —
+hashable and array-free so it can ride in a jit-static ``FleetConfig``, and
+convertible both ways:
+
+* ``ServiceSpec.from_process(svc)`` maps a DES ``ServiceProcess`` onto it;
+* ``spec.to_process()`` builds the DES process back, so one
+  :class:`~repro.scenarios.spec.Scenario` drives both engines from the same
+  numbers (means, jitter inflation — parity is property-tested).
+
+It replaces the duplicated ``core.workloads.ServiceProcess`` /
+``fleetsim.config.ServiceSpec`` pair; ``repro.fleetsim.config`` re-exports
+this class for backwards compatibility.
+"""
+
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+
+from repro.core.workloads import (
+    BimodalService,
+    BoundedParetoService,
+    ExponentialService,
+    ServiceProcess,
+)
+
+SERVICE_EXPONENTIAL = "exponential"
+SERVICE_BIMODAL = "bimodal"
+SERVICE_PARETO = "pareto"
+
+
+@dataclass(frozen=True)
+class ServiceSpec:
+    """Hashable, array-free description of a service-time process.
+
+    Mirrors ``repro.core.workloads``: ``intrinsic`` demand is drawn per
+    request (shared by both copies of a clone pair), execution noise + the
+    jitter spike are drawn independently per execution.
+    """
+
+    kind: str
+    params: tuple[float, ...]
+    jitter_p: float = 0.01
+    jitter_mult: float = 15.0
+    mean: float = 0.0           # pre-jitter mean, for load normalisation
+
+    @property
+    def effective_mean(self) -> float:
+        return self.mean * (1.0 + self.jitter_p * (self.jitter_mult - 1.0))
+
+    @classmethod
+    def exponential(cls, mean: float = 25.0, **kw) -> "ServiceSpec":
+        return cls(SERVICE_EXPONENTIAL, (float(mean),), mean=float(mean), **kw)
+
+    @classmethod
+    def bimodal(cls, short: float = 25.0, long: float = 250.0,
+                p_long: float = 0.10, **kw) -> "ServiceSpec":
+        mean = (1 - p_long) * short + p_long * long
+        return cls(SERVICE_BIMODAL, (float(short), float(long), float(p_long)),
+                   mean=float(mean), **kw)
+
+    @classmethod
+    def pareto(cls, xm: float = 10.0, alpha: float = 1.2,
+               cap: float = 1000.0, **kw) -> "ServiceSpec":
+        mean = BoundedParetoService(xm, alpha, cap).mean
+        return cls(SERVICE_PARETO, (float(xm), float(alpha), float(cap)),
+                   mean=float(mean), **kw)
+
+    @classmethod
+    def from_process(cls, svc: ServiceProcess) -> "ServiceSpec":
+        """Map a DES service process onto its array-form spec."""
+        kw = dict(jitter_p=svc.jitter_p, jitter_mult=svc.jitter_mult)
+        if isinstance(svc, ExponentialService):
+            return cls.exponential(svc.mean, **kw)
+        if isinstance(svc, BimodalService):
+            return cls.bimodal(svc.short, svc.long, svc.p_long, **kw)
+        if isinstance(svc, BoundedParetoService):
+            return cls.pareto(svc.xm, svc.alpha, svc.cap, **kw)
+        raise TypeError(f"no fleetsim mapping for {type(svc).__name__}")
+
+    def to_process(self) -> ServiceProcess:
+        """Build the equivalent DES service process (inverse of
+        :meth:`from_process`; round-trips exactly)."""
+        kw = dict(jitter_p=self.jitter_p, jitter_mult=self.jitter_mult)
+        if self.kind == SERVICE_EXPONENTIAL:
+            return ExponentialService(self.params[0], **kw)
+        if self.kind == SERVICE_BIMODAL:
+            return BimodalService(*self.params, **kw)
+        if self.kind == SERVICE_PARETO:
+            return BoundedParetoService(*self.params, **kw)
+        raise ValueError(f"unknown service kind {self.kind!r}")
+
+    # ------------------------------------------------------------- JSON ----
+    def to_json(self) -> dict:
+        d = asdict(self)
+        d["params"] = list(self.params)
+        d.pop("mean")            # derived; recomputed on load
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ServiceSpec":
+        unknown = sorted(set(d) - {"kind", "params", "jitter_p",
+                                   "jitter_mult"})
+        if unknown:
+            # a misspelled knob must not silently run the default instead
+            raise ValueError(f"unknown service keys {unknown}; valid: "
+                             "['jitter_mult', 'jitter_p', 'kind', 'params']")
+        kw = {k: d[k] for k in ("jitter_p", "jitter_mult") if k in d}
+        kind, params = d["kind"], tuple(d["params"])
+        factory = {SERVICE_EXPONENTIAL: cls.exponential,
+                   SERVICE_BIMODAL: cls.bimodal,
+                   SERVICE_PARETO: cls.pareto}.get(kind)
+        if factory is None:
+            raise ValueError(f"unknown service kind {kind!r}")
+        return factory(*params, **kw)

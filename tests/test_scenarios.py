@@ -1,0 +1,380 @@
+"""Scenario API: registry, ServiceSpec parity, JSON round-trip, trace replay.
+
+The acceptance contracts of the One Scenario API:
+
+* the unified registry feeds both engines — ``POLICY_IDS``/``POLICY_NAMES``
+  are live views of it, duplicate names/ids raise, and a policy registered
+  once (the ``examples/custom_spine_policy.py`` pow2-spine variant) runs
+  through the DES *and* FleetSim from the same :class:`Scenario` object and
+  enters ``policies="registered"`` sweeps automatically;
+* the unified :class:`ServiceSpec` agrees with ``core.workloads`` on means
+  and jitter inflation (property-tested over parameters);
+* scenarios round-trip through JSON, and the bundled golden scenario file
+  reproduces the PR-2 single-ToR golden run bit-identically;
+* :class:`TraceArrival` replays the same per-tick counts through both
+  engines (closing the ROADMAP trace-replay item).
+"""
+
+import importlib.util
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.workloads import (
+    BimodalService,
+    BoundedParetoService,
+    ExponentialService,
+)
+from repro.fleetsim import POLICY_IDS, POLICY_NAMES
+from repro.fleetsim.validate import cross_check_scenario
+from repro.scenarios import (
+    DuplicatePolicyError,
+    Scenario,
+    ServiceSpec,
+    SweepSpec,
+    TraceArrival,
+    registry,
+)
+
+GOLDEN = Path(__file__).parent / "golden" / "fleetsim_single_tor.json"
+EXAMPLES = Path(__file__).parent.parent / "examples"
+
+
+def _load_example(name):
+    spec = importlib.util.spec_from_file_location(name, EXAMPLES / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ---------------------------------------------------------------- registry --
+def test_builtin_ids_are_stable():
+    assert dict(POLICY_IDS) == {
+        "baseline": 0, "c-clone": 1, "netclone": 2, "racksched": 3,
+        "netclone+racksched": 4}
+    assert POLICY_NAMES[2] == "netclone"
+    assert len(POLICY_NAMES) == len(POLICY_IDS)
+    # DES-only policies are registered but carry no array id
+    assert registry.get("laedge").policy_id is None
+    assert "laedge" not in POLICY_IDS
+
+
+def test_duplicate_name_and_id_raise():
+    with pytest.raises(DuplicatePolicyError):
+        registry.register("netclone")
+    with pytest.raises(DuplicatePolicyError):
+        registry.register("some-new-policy", policy_id=0)
+    # a failed registration leaves the table untouched
+    assert "some-new-policy" not in registry.names()
+
+
+def test_des_first_import_stays_numpy_only():
+    """Importing the DES before fleetsim/scenarios must work (no
+    registration-order cycle) and must not drag in jax — the registry's
+    name/id/flag tier is numpy-only (needs a fresh process)."""
+    import subprocess
+    import sys
+
+    code = ("import sys\n"
+            "import repro.core.simulator\n"
+            "from repro.core.policies import make_policy\n"
+            "make_policy('netclone', 4)\n"
+            "from repro.scenarios import registry\n"
+            "assert registry.get('c-clone').client_dup\n"
+            "assert 'jax' not in sys.modules\n"
+            "print('OK')\n")
+    out = subprocess.run([sys.executable, "-c", code], text=True,
+                         capture_output=True,
+                         cwd=str(Path(__file__).parent.parent),
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert out.returncode == 0 and "OK" in out.stdout, out.stderr
+
+
+def test_early_registration_collides_at_call_site():
+    """A colliding register() issued before any accessor has loaded the
+    builtin table must raise at ITS call site, not poison the later
+    builtin import (needs a fresh process)."""
+    import subprocess
+    import sys
+
+    code = ("from repro.scenarios import registry, DuplicatePolicyError\n"
+            "try:\n"
+            "    registry.register('mine', policy_id=2)\n"
+            "except DuplicatePolicyError:\n"
+            "    assert registry.policy_id_map()['netclone'] == 2\n"
+            "    print('OK')\n")
+    out = subprocess.run([sys.executable, "-c", code], text=True,
+                         capture_output=True,
+                         cwd=str(Path(__file__).parent.parent),
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert out.returncode == 0 and "OK" in out.stdout, out.stderr
+
+
+def test_remove_refuses_id_holes():
+    """Teardown order cannot silently brick the dense lax.switch table."""
+    registry.register("tmp-a", policy_id=5)
+    registry.register("tmp-b", policy_id=6)
+    try:
+        with pytest.raises(ValueError, match="id hole"):
+            registry.remove("tmp-a")
+    finally:
+        registry.remove("tmp-b")
+        registry.remove("tmp-a")
+    assert "tmp-a" not in registry.names()
+
+
+def test_registry_flags_feed_engines():
+    assert registry.client_dup_ids() == (POLICY_IDS["c-clone"],)
+    assert set(registry.spine_clone_ids()) == {
+        POLICY_IDS["netclone"], POLICY_IDS["netclone+racksched"]}
+    assert len(registry.route_branches()) == len(POLICY_IDS)
+
+
+def test_registration_enters_both_engines_and_sweeps():
+    """The acceptance demo: the pow2-spine example policy, registered once,
+    is visible in POLICY_IDS, runs through DES + FleetSim from one Scenario,
+    and enters policies="registered" sweeps."""
+    mod = _load_example("custom_spine_policy")
+    mod.register_pow2()
+    try:
+        assert POLICY_IDS["netclone+pow2spine"] == 5
+        assert "netclone+pow2spine" in registry.two_engine_names()
+        sc = Scenario(name="pow2", policy="netclone+pow2spine", load=0.35,
+                      servers=4, workers=8, n_ticks=3000)
+        fr = sc.run_fleetsim()
+        dr = sc.run_des(n_requests=2000)
+        assert fr.n_completed > 0 and dr.n_completed > 0
+        assert fr.n_cloned > 0 and dr.n_cloned > 0
+        # ...and on a fabric, the custom spine placement engages
+        hot = Scenario(name="pow2-hot", policy="netclone+pow2spine",
+                       load=0.55, racks=3, servers=4, workers=8,
+                       n_ticks=4000, hot_rack_weight=5.0).run_fleetsim()
+        assert hot.n_interrack_cloned > 0
+        spec = SweepSpec(base=Scenario(servers=4, workers=8, n_ticks=1500),
+                         policies="registered", loads=(0.3,), seeds=(0,))
+        assert "netclone+pow2spine" in spec.resolved_policies()
+        sw = spec.run_fleetsim()
+        assert {r.policy for r in sw.results} == set(
+            registry.two_engine_names())
+    finally:
+        registry.remove("netclone+pow2spine")
+    assert "netclone+pow2spine" not in POLICY_IDS
+
+
+# ------------------------------------------------------- ServiceSpec parity --
+def _processes(mean, short, long, p_long, xm, alpha_x, cap_mult, jp, jm):
+    return [
+        ExponentialService(mean, jitter_p=jp, jitter_mult=jm),
+        BimodalService(short, long, p_long, jitter_p=jp, jitter_mult=jm),
+        BoundedParetoService(xm, 1.0 + alpha_x, xm * cap_mult,
+                             jitter_p=jp, jitter_mult=jm),
+    ]
+
+
+@given(mean=st.floats(1.0, 500.0), short=st.floats(1.0, 50.0),
+       long=st.floats(51.0, 1000.0), p_long=st.floats(0.0, 1.0),
+       xm=st.floats(1.0, 50.0), alpha_x=st.floats(0.01, 2.0),
+       cap_mult=st.floats(2.0, 100.0), jp=st.floats(0.0, 0.05),
+       jm=st.floats(1.0, 30.0))
+@settings(max_examples=60, deadline=None)
+def test_service_spec_parity_property(mean, short, long, p_long, xm, alpha_x,
+                                      cap_mult, jp, jm):
+    """The unified spec and the DES process agree on pre-jitter means and
+    jitter inflation for every kind, and round-trip exactly."""
+    for proc in _processes(mean, short, long, p_long, xm, alpha_x, cap_mult,
+                           jp, jm):
+        spec = ServiceSpec.from_process(proc)
+        assert spec.mean == pytest.approx(proc.mean, rel=1e-12)
+        assert spec.effective_mean == pytest.approx(proc.effective_mean,
+                                                    rel=1e-12)
+        back = spec.to_process()
+        assert type(back) is type(proc)
+        assert back.mean == pytest.approx(proc.mean, rel=1e-12)
+        assert back.jitter_p == proc.jitter_p
+        assert back.jitter_mult == proc.jitter_mult
+        assert ServiceSpec.from_process(back) == spec
+
+
+def test_service_spec_json_round_trip():
+    for spec in (ServiceSpec.exponential(42.0, jitter_p=0.002),
+                 ServiceSpec.bimodal(20.0, 300.0, 0.05),
+                 ServiceSpec.pareto(12.0, 1.3, 800.0, jitter_mult=10.0)):
+        assert ServiceSpec.from_json(spec.to_json()) == spec
+
+
+# ------------------------------------------------------- scenario JSON + IO --
+def test_scenario_json_round_trip(tmp_path):
+    sc = Scenario(name="rt", policy="racksched", load=0.65, seed=7, racks=2,
+                  servers=5, workers=9, n_ticks=1234,
+                  service=ServiceSpec.bimodal(),
+                  arrival=TraceArrival(counts=(1, 0, 2, 3), dt_us=2.0),
+                  hot_rack_weight=3.0, straggler_rack_mult=2.0,
+                  slowdown=(1.0,) * 10, fail_window_ticks=(100, 200),
+                  queue_cap=32, max_arrivals=6)
+    assert Scenario.from_json(sc.to_json()) == sc
+    p = sc.to_file(tmp_path / "sc.json")
+    assert Scenario.from_file(p) == sc
+
+    spec = SweepSpec(base=sc, policies=("baseline", "netclone"),
+                     loads=(0.2, 0.5), seeds=(0, 1))
+    assert SweepSpec.from_json(spec.to_json()) == spec
+    p = spec.to_file(tmp_path / "spec.json")
+    assert SweepSpec.from_file(p) == spec
+    # "registered" sentinel survives the round trip as a string
+    spec = SweepSpec(base=sc)
+    assert SweepSpec.from_json(spec.to_json()).policies == "registered"
+
+
+def test_from_json_rejects_unknown_keys():
+    """Files are the API: a misspelled knob must fail loudly, not silently
+    run a different experiment."""
+    good = Scenario(name="x").to_json()
+    with pytest.raises(ValueError, match="fail_window"):
+        Scenario.from_json({**good, "fail_window": [1, 2]})
+    with pytest.raises(ValueError, match="n_tick"):
+        Scenario.from_json({**good, "n_tick": 99})
+    with pytest.raises(ValueError, match="sweep keys"):
+        SweepSpec.from_json({"base": good, "load": [0.1]})
+    # ...including inside the service / arrival sub-objects
+    with pytest.raises(ValueError, match="jiter_p"):
+        ServiceSpec.from_json({"kind": "exponential", "params": [25.0],
+                               "jiter_p": 0.1})
+    from repro.scenarios import arrival_from_json
+
+    with pytest.raises(ValueError, match="dt"):
+        arrival_from_json({"kind": "trace", "counts": [1], "dt": 2.0})
+    with pytest.raises(ValueError, match="counts"):
+        arrival_from_json({"kind": "poisson", "counts": [1]})
+
+
+def test_golden_scenario_file_bit_identical():
+    """The bundled golden scenario reproduces the PR-2 single-ToR golden
+    run bit-identically through the new API (every metric, full
+    histogram)."""
+    g = json.loads(GOLDEN.read_text())
+    case = next(c for c in g["cases"]
+                if c["policy"] == "netclone" and c["seed"] == 0)
+    sc = Scenario.from_file("golden_single_tor")
+    assert (sc.servers, sc.workers, sc.queue_cap, sc.max_arrivals,
+            sc.n_ticks) == (g["cfg"]["n_servers"], g["cfg"]["n_workers"],
+                            g["cfg"]["queue_cap"], g["cfg"]["max_arrivals"],
+                            g["cfg"]["n_ticks"])
+    _, m = sc.fleet_metrics()
+    for field, want in case["metrics"].items():
+        got = np.asarray(getattr(m, field)).reshape(-1)
+        assert np.array_equal(got, np.asarray(want).reshape(-1)), field
+
+
+def test_library_names_resolve():
+    from repro.scenarios import load_any, scenario_library
+
+    lib = scenario_library()
+    assert {"golden_single_tor", "validate_grid", "trace_burst",
+            "multirack_hot"} <= set(lib)
+    assert isinstance(load_any("validate_grid"), SweepSpec)
+    assert isinstance(load_any("trace_burst"), Scenario)
+    with pytest.raises(FileNotFoundError):
+        load_any("no_such_scenario")
+
+
+# ------------------------------------------------------------ trace replay --
+def test_trace_arrival_tick_counts_and_times():
+    tr = TraceArrival(counts=(3, 0, 2), dt_us=1.0)
+    assert tr.tick_counts(7).tolist() == [3, 0, 2, 3, 0, 2, 3]
+    pad = TraceArrival(counts=(3, 0, 2), repeat=False)
+    assert pad.tick_counts(5).tolist() == [3, 0, 2, 0, 0]
+    rng = np.random.default_rng(0)
+    times = tr.des_times(rng, 0.0, 0, n_ticks=6)
+    assert len(times) == 10                      # 3+0+2 tiled over 6 ticks
+    assert np.all(np.diff(times) >= 0)
+    counts, _ = np.histogram(times, bins=np.arange(7.0))
+    assert counts.tolist() == [3, 0, 2, 3, 0, 2]
+    assert tr.mean_rate_per_us(0.0, 6) == pytest.approx(10 / 6)
+    with pytest.raises(ValueError):
+        TraceArrival(counts=())
+    with pytest.raises(ValueError):
+        TraceArrival(counts=(1, -2))
+
+
+def test_trace_scenario_replays_exact_counts_in_fleetsim():
+    """The replayed per-tick sequence IS the arrival process: admitted
+    arrivals equal the trace total, deterministically."""
+    counts = tuple(np.random.default_rng(3).poisson(0.5, 400).tolist())
+    sc = Scenario(name="tr", policy="netclone", servers=4, workers=8,
+                  n_ticks=800, arrival=TraceArrival(counts=counts))
+    fr = sc.run_fleetsim()
+    assert fr.n_arrivals == 2 * sum(counts)      # tiled once
+    assert fr.n_truncated == 0
+    fr2 = sc.run_fleetsim()
+    assert fr2.n_arrivals == fr.n_arrivals and fr2.p99_us == fr.p99_us
+    # the DES sees the same schedule
+    dr = sc.run_des()
+    assert dr.n_requests == 2 * sum(counts)
+
+
+def test_trace_cross_validation_small():
+    """A bursty trace scenario agrees across engines within the documented
+    tolerances (the nightly validate runs the full-length version)."""
+    sc = Scenario.from_file("trace_burst")
+    check = cross_check_scenario(sc, n_ticks=12_000)
+    assert check.ok, check.describe()
+
+
+def test_poisson_unchanged_without_arrival_counts():
+    from repro.fleetsim.engine import make_params
+
+    sc = Scenario(policy="baseline", servers=4, workers=8, n_ticks=1000)
+    cfg = sc.fleet_config()
+    assert cfg.arrival == "poisson"
+    with pytest.raises(ValueError):
+        make_params(cfg, 0, 1.0, 0, arrival_counts=np.ones(1000, np.int32))
+    tcfg = Scenario(policy="baseline", servers=4, workers=8, n_ticks=1000,
+                    arrival=TraceArrival(counts=(1,))).fleet_config()
+    with pytest.raises(ValueError):
+        make_params(tcfg, 0, 1.0, 0)             # trace needs counts
+    with pytest.raises(ValueError):
+        make_params(tcfg, 0, 1.0, 0,
+                    arrival_counts=np.ones(99, np.int32))
+
+
+def test_pinned_sweep_matches_single_scenario_run():
+    """A sweep over a scenario with pinned array shapes reproduces the
+    single-run cells exactly (sweep_grid must not re-derive arrival
+    headroom when max_arrivals is pinned)."""
+    sc = Scenario.from_file("golden_single_tor")
+    spec = SweepSpec(base=sc, policies=("netclone",), loads=(0.4,),
+                     seeds=(0,))
+    cell = spec.run_fleetsim().results[0]
+    one = sc.run_fleetsim()
+    assert (cell.n_arrivals, cell.n_cloned, cell.n_filtered, cell.p99_us) \
+        == (one.n_arrivals, one.n_cloned, one.n_filtered, one.p99_us)
+
+
+# ------------------------------------------------------------------- CLI ----
+def test_cli_list_and_run(tmp_path, capsys):
+    from repro.scenarios.__main__ import main
+
+    assert main(["--list"]) == 0
+    out = capsys.readouterr().out
+    assert "netclone+racksched" in out and "trace_burst" in out
+    art = tmp_path / "art.json"
+    assert main(["golden_single_tor", "--engine", "fleetsim",
+                 "--ticks", "500", "--out", str(art)]) == 0
+    payload = json.loads(art.read_text())
+    assert payload["rows"] and payload["rows"][0]["engine"] == "fleetsim"
+    with pytest.raises(SystemExit):
+        main([])                                  # file required
+
+
+def test_cli_des_incompatible_scenarios(capsys):
+    from repro.scenarios.__main__ import main
+
+    # --engine both skips the DES leg with a note on multi-rack scenarios
+    assert main(["multirack_hot", "--engine", "both", "--ticks", "400"]) == 0
+    assert "[skip des]" in capsys.readouterr().out
+    # asking for the DES explicitly is an error, not a traceback
+    with pytest.raises(SystemExit):
+        main(["multirack_hot", "--engine", "des", "--ticks", "400"])
