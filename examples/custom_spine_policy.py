@@ -37,7 +37,7 @@ def pow2_spine_place(rack_load, server_state, home, r1, r2, remote_cand, *,
     return pick * n_servers + remote_cand
 
 
-def register_pow2(policy_id: int = 5):
+def register_pow2(policy_id: int = 7):
     """One registration covers the DES (NetClone semantics — the spine
     variant only differs when racks > 1), the FleetSim route branch (shared
     with netclone), and the spine placement hook."""

@@ -286,11 +286,11 @@ registry.register(
     spine_clone=True,
     description="§3.7: idle-idle pair clones, JSQ fallback otherwise")
 registry.register(
-    "laedge", des=LaedgePolicy,
-    description="LÆDGE coordinator node (DES only: needs a CPU queue)")
+    "laedge", policy_id=5, des=LaedgePolicy,
+    description="LÆDGE coordinator node (CPU queue; clone iff >=2 idle)")
 registry.register(
-    "hedge", des=_hedge_factory,
-    description="delayed hedging (DES only: needs per-request timers)")
+    "hedge", policy_id=6, des=_hedge_factory,
+    description="delayed hedging via per-request timers (Tail at Scale)")
 registry.register(
     "netclone-nofilter", des=_netclone_nofilter_factory,
     description="NetClone with response filtering disabled (Fig. 15)")

@@ -138,6 +138,10 @@ class Simulator:
         self._coord_pending: deque[Request] = deque()
         self._coord_outstanding = np.zeros(n_servers, dtype=np.int64)
         self._coord_seen: set[int] = set()
+        # redundant responses absorbed at the coordinator — the LÆDGE
+        # counterpart of switch filtering, surfaced as SimResult.n_filtered
+        # so clone accounting balances for coordinator policies too
+        self._coord_absorbed = 0
         # stats
         self.n_clone_drops = 0
         self.n_redundant_at_client = 0
@@ -350,6 +354,7 @@ class Simulator:
                 # dispatch buffered requests onto newly idle servers
                 self._drain_laedge(heap, done, rng)
                 if resp.req_id in self._coord_seen:
+                    self._coord_absorbed += 1
                     continue  # the coordinator absorbs the slower response
                 self._coord_seen.add(resp.req_id)
                 self._push(heap, done + c.link, _RESP_AT_CLIENT, (i, resp))
@@ -447,6 +452,11 @@ class Simulator:
                      None)
         if ft is None:  # host-timer policies (hedge) own their tables
             ft = getattr(self.policy, "filter_tables", None)
+        # coordinator policies absorb redundancy at the coordinator CPU,
+        # not a filter table — same accounting role, same field
+        n_filtered = (self._coord_absorbed
+                      if self.policy.needs_coordinator
+                      else ft.n_filtered if ft is not None else 0)
         return SimResult(
             policy=self.policy.name,
             offered_load=load,
@@ -460,7 +470,7 @@ class Simulator:
             n_completed=int((~np.isnan(lat)).sum()),
             n_cloned=self.policy.n_cloned,
             n_clone_drops=self.n_clone_drops,
-            n_filtered=ft.n_filtered if ft is not None else 0,
+            n_filtered=n_filtered,
             n_redundant_at_client=self.n_redundant_at_client,
             empty_queue_fraction=(self._empty_q_responses / self._total_responses
                                   if self._total_responses else 1.0),

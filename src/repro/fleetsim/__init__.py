@@ -20,7 +20,14 @@ from repro.fleetsim.config import (
 )
 from repro.fleetsim.engine import RunParams, make_params, simulate, simulate_batch
 from repro.fleetsim.metrics import FleetResult, summarize
-from repro.fleetsim.state import FabricSwitch, FleetState, Metrics, init_fleet_state
+from repro.fleetsim.state import (
+    CoordState,
+    FabricSwitch,
+    FleetState,
+    HedgeWheel,
+    Metrics,
+    init_fleet_state,
+)
 from repro.fleetsim.sweep import SweepResult, rack_skew, sweep_grid
 from repro.fleetsim.validate import (
     CrossCheck,
@@ -42,6 +49,8 @@ __all__ = [
     "summarize",
     "FabricSwitch",
     "FleetState",
+    "CoordState",
+    "HedgeWheel",
     "Metrics",
     "init_fleet_state",
     "SweepResult",

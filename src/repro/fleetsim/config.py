@@ -70,6 +70,8 @@ POLICY_CCLONE = POLICY_IDS["c-clone"]
 POLICY_NETCLONE = POLICY_IDS["netclone"]
 POLICY_RACKSCHED = POLICY_IDS["racksched"]
 POLICY_NCRS = POLICY_IDS["netclone+racksched"]
+POLICY_LAEDGE = POLICY_IDS["laedge"]
+POLICY_HEDGE = POLICY_IDS["hedge"]
 
 
 @dataclass(frozen=True)
@@ -129,6 +131,30 @@ class FleetConfig:
     # one-way client↔spine / spine↔rack-switch hop (µs); only paid when the
     # fabric actually has a spine tier (n_racks > 1)
     spine_hop_us: float = 0.5
+    # ---- optional pipeline stages (repro.fleetsim.stages) ----------------
+    # Static compile-out flags: with a flag off the stage contributes ZERO
+    # traced ops (the jitted program is the one the flag-less engine built,
+    # so the n_racks=1 goldens stay bit-identical); with it on, the stage's
+    # sub-state joins FleetState and policies registered with the matching
+    # hook (registry coordinator / hedge_timer) become runnable.  Scenario
+    # / sweep builders flip these automatically from the policy set.
+    #
+    # coordinator: LÆDGE-style CPU queue node hanging off the top switch —
+    # a ring buffer of pending requests drained each tick by the policy's
+    # registered dispatch rule, throttled by a coord_cpu_us-per-packet
+    # credit (the paper's coordinator-CPU bottleneck).
+    coordinator: bool = False
+    coordinator_cap: int = 2 ** 11      # pending-request ring slots
+    coordinator_drain: int = 0          # max pops per tick (0 → 2×arrivals)
+    coord_cpu_us: float = 1.5           # CPU per packet — matches the DES
+    # hedge_timer: fixed-depth timer wheel ((n_slots, wheel_width) entries)
+    # firing delayed duplicates hedge_delay_us after arrival unless the
+    # first response beat the timer.  Width 0 sizes to max_arrivals (every
+    # arrival lane can arm); slots 0 sizes to the delay horizon + 1.
+    hedge_timer: bool = False
+    hedge_delay_us: float = 75.0        # ≈p95 service — matches HedgePolicy
+    hedge_wheel_slots: int = 0
+    hedge_wheel_width: int = 0
     # response-filter backend: "vectorized" (one scatter/tick, default),
     # "scan" (exact lane-sequential switch_jax.filter semantics), or
     # "pallas" (kernels.fingerprint_filter — the VMEM-resident kernel)
@@ -160,6 +186,16 @@ class FleetConfig:
         if self.n_ticks * self.max_arrivals >= 2 ** 24:
             raise ValueError("n_ticks × max_arrivals must stay below 2^24 "
                              "(REQ_IDs are carried in float32 payloads)")
+        if self.coordinator and self.coordinator_cap < 1:
+            raise ValueError("coordinator_cap must be >= 1")
+        if self.hedge_timer:
+            if self.hedge_delay_us <= 0:
+                raise ValueError("hedge_delay_us must be positive")
+            if 0 < self.hedge_wheel_slots <= self.hedge_delay_ticks:
+                raise ValueError(
+                    f"hedge_wheel_slots must exceed the delay horizon "
+                    f"({self.hedge_delay_ticks} ticks) so an armed entry "
+                    "cannot alias a pending slot")
 
     @property
     def n_groups(self) -> int:
@@ -188,6 +224,31 @@ class FleetConfig:
         return 2.0 * (self.spine_hop_us + self.pipeline_pass_us)
 
     @property
+    def hedge_delay_ticks(self) -> int:
+        """The hedge delay quantized to ticks (at least one — a same-tick
+        hedge would race its own original)."""
+        return max(1, round(self.hedge_delay_us / self.dt_us))
+
+    @property
+    def wheel_slots(self) -> int:
+        """Resolved timer-wheel depth: explicit, or the delay horizon + 1
+        (an entry armed at tick t fires exactly at t + delay, and the slot
+        it lands in drained one full rotation earlier)."""
+        return self.hedge_wheel_slots or self.hedge_delay_ticks + 1
+
+    @property
+    def wheel_width(self) -> int:
+        """Resolved per-slot entry budget: explicit, or ``max_arrivals``
+        (every arrival lane of one tick can arm without drops)."""
+        return self.hedge_wheel_width or self.max_arrivals
+
+    @property
+    def drain_per_tick(self) -> int:
+        """Resolved coordinator drain bound: explicit, or twice the
+        arrival lanes (the backlog can shrink even at full admission)."""
+        return self.coordinator_drain or 2 * self.max_arrivals
+
+    @property
     def duration_us(self) -> float:
         return self.n_ticks * self.dt_us
 
@@ -201,3 +262,17 @@ class FleetConfig:
         lam = max_rate_per_us * self.dt_us
         lanes = int(math.ceil(lam + 6.0 * math.sqrt(max(lam, 1e-9)) + 2.0))
         return replace(self, max_arrivals=max(4, lanes))
+
+    def with_policy_stages(self, policies) -> "FleetConfig":
+        """Compile in the pipeline stages the given policy names need
+        (coordinator / hedge_timer registry hooks).  A config whose policy
+        set needs neither is returned unchanged — and therefore produces
+        the exact bit-identical program it always did."""
+        need_coord = any(registry.needs_coordinator(p) for p in policies)
+        need_hedge = any(registry.needs_hedge_timer(p) for p in policies)
+        cfg = self
+        if need_coord and not cfg.coordinator:
+            cfg = replace(cfg, coordinator=True)
+        if need_hedge and not cfg.hedge_timer:
+            cfg = replace(cfg, hedge_timer=True)
+        return cfg

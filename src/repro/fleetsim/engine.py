@@ -6,27 +6,20 @@ switches with GrpT/StateT/FilterT under a spine that assigns fabric-global
 REQ_IDs, aggregates per-rack load, and filters inter-rack clone pairs),
 FCFS multi-worker servers with the CLO=2 stale-state drop rule, and client
 receiver threads with per-response RX cost and redundant-response dedup.
-The entire cluster lives in :class:`FleetState` arrays; a tick is:
+The entire cluster lives in :class:`FleetState` arrays.
 
-1. (recovery tick only) wipe fabric soft state — §3.6 failover;
-2. draw the tick's Poisson arrivals, pick each request's home rack (skewed
-   by ``rack_weights`` for hot-rack scenarios), and route client → spine →
-   rack switch → server under the traced policy id
-   (``policies.route_fabric``: the home rack switch decides locally, the
-   spine upgrades saturated NetClone lanes to inter-rack clones);
-   REQ_IDs come from the spine sequence;
-3. advance workers by ``dt``, collect completions;
-4. apply the server-side CLO=2 drop rule, enqueue survivors into the
-   per-server FCFS rings, pull the oldest queued jobs onto free workers and
-   draw their execution times (intrinsic base × per-execution noise ×
-   straggler slowdown + jitter spikes, as in ``core.workloads``);
-5. compact completions into the response lanes and pass them back up:
-   per-rack StateT update + fingerprint filter at the pair's filter switch
-   (its rack switch, or the spine for inter-rack pairs; vectorized / scan /
-   Pallas backend over one flattened table array);
-6. deliver survivors to clients: dedup, receiver-backlog queuing, per-rack
-   latency histograms + counters (inter-rack copies pay their spine detour
-   as a per-copy hop term carried in the payload).
+A tick is the **staged pipeline** composed in
+:func:`repro.fleetsim.stages.build_step`:
+
+    arrival → route (ToR + spine) → coordinator → hedge_timer
+            → server → response/filter → client
+
+Each stage is a pure function over the fleet state; the coordinator
+(LÆDGE's CPU queue node) and hedge_timer (the delayed-duplicate timer
+wheel) stages are compiled in only when the static ``FleetConfig`` flags
+ask for them, so the flag-off program is exactly the pre-stage engine —
+see ``stages.py`` for the per-stage semantics and the registry hooks
+policies use to plug in.
 
 Feedback staleness is one tick: responses processed at tick *t* steer
 routing from tick *t+1*, matching the ≈1 µs server→switch path of the DES.
@@ -53,44 +46,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.header import CLO_CLONE
-from repro.core.switch_jax import (
-    SwitchState,
-    _filter_step,
-    filter_tick_vectorized,
-    group_pairs_array,
-)
-from repro.fleetsim.config import (
-    SERVICE_BIMODAL,
-    SERVICE_EXPONENTIAL,
-    SERVICE_PARETO,
-    FleetConfig,
-)
-from repro.fleetsim.policies import dedup_tick, id_mask, route_fabric
+from repro.core.switch_jax import group_pairs_array
+from repro.fleetsim.config import FleetConfig
+from repro.fleetsim.stages import build_step
+from repro.fleetsim.state import Metrics, init_fleet_state
 from repro.scenarios import registry
-from repro.fleetsim.state import (
-    QF,
-    QF_BASE,
-    QF_CLIENT,
-    QF_CLO,
-    QF_FRACK,
-    QF_HOP,
-    QF_IDX,
-    QF_RID,
-    QF_TARR,
-    WF,
-    WF_CLIENT,
-    WF_CLO,
-    WF_FRACK,
-    WF_HOP,
-    WF_IDX,
-    WF_REM,
-    WF_RID,
-    WF_TARR,
-    FleetState,
-    Metrics,
-    init_fleet_state,
-)
 
 
 class RunParams(NamedTuple):
@@ -149,12 +109,32 @@ def check_arrival_counts(cfg: FleetConfig, arrival_counts) -> np.ndarray:
     return np.zeros((0,), np.int32)
 
 
+def check_policy_stages(cfg: FleetConfig, policy_id: int) -> None:
+    """A policy that needs an optional stage cannot run on a config that
+    compiled it out — fail at params construction, not with silent
+    zero-traffic results."""
+    name = registry.policy_name_map().get(int(policy_id))
+    if name is None:
+        return
+    if registry.needs_coordinator(name) and not cfg.coordinator:
+        raise ValueError(
+            f"policy {name!r} needs the coordinator stage; build the "
+            "config with coordinator=True (Scenario / sweep_grid do this "
+            "automatically via FleetConfig.with_policy_stages)")
+    if registry.needs_hedge_timer(name) and not cfg.hedge_timer:
+        raise ValueError(
+            f"policy {name!r} needs the hedge_timer stage; build the "
+            "config with hedge_timer=True (Scenario / sweep_grid do this "
+            "automatically via FleetConfig.with_policy_stages)")
+
+
 def make_params(cfg: FleetConfig, policy_id: int, rate_per_us: float,
                 seed: int, slowdown=None, rack_weights=None,
                 fail_window: tuple[int, int] | None = None,
                 arrival_counts=None) -> RunParams:
     slowdown, rack_weights = check_fabric_arrays(cfg, slowdown, rack_weights)
     arrival_counts = check_arrival_counts(cfg, arrival_counts)
+    check_policy_stages(cfg, policy_id)
     f0, f1 = fail_window if fail_window is not None \
         else (cfg.n_ticks + 1, cfg.n_ticks + 1)
     return RunParams(policy_id=jnp.int32(policy_id),
@@ -167,360 +147,12 @@ def make_params(cfg: FleetConfig, policy_id: int, rate_per_us: float,
                      arrival_counts=jnp.asarray(arrival_counts, jnp.int32))
 
 
-# --------------------------------------------------------------- sampling ---
-def _intrinsic(cfg: FleetConfig, u):
-    """Per-request base demand (shared by both copies of a clone pair),
-    from a pre-drawn uniform in [0, 1)."""
-    p = cfg.service.params
-    if cfg.service.kind == SERVICE_EXPONENTIAL:
-        return jnp.full(u.shape, p[0], jnp.float32)
-    if cfg.service.kind == SERVICE_BIMODAL:
-        short, long, p_long = p
-        return jnp.where(u < p_long, long, short).astype(jnp.float32)
-    if cfg.service.kind == SERVICE_PARETO:
-        xm, alpha, cap = p
-        u = jnp.minimum(u, 1.0 - 1e-7)
-        r = (xm / cap) ** alpha
-        return (xm / (1.0 - u * (1.0 - r)) ** (1.0 / alpha)).astype(jnp.float32)
-    raise ValueError(cfg.service.kind)
-
-
-def _execute(cfg: FleetConfig, key, base):
-    """One execution's runtime: per-copy randomness + the jitter spike.
-    One uniform draw feeds both (inverse-CDF), keeping the tick cheap."""
-    u = jax.random.uniform(key, base.shape + (2,))
-    if cfg.service.kind == SERVICE_EXPONENTIAL:
-        # dummy-RPC spin drawn at the server (§5.1.2)
-        dur = -jnp.log1p(-u[..., 0] * (1.0 - 1e-7)) * base
-    else:
-        dur = base * (0.9 + 0.2 * u[..., 0])
-    spike = u[..., 1] < cfg.service.jitter_p
-    return jnp.where(spike, dur * cfg.service.jitter_mult, dur)
-
-
-def _rank_among_earlier(mask_2d):
-    """For (S, L) masks: count of earlier True lanes in the same row."""
-    c = jnp.cumsum(mask_2d.astype(jnp.int32), axis=-1)
-    return c - mask_2d.astype(jnp.int32)
-
-
-# ------------------------------------------------------------------- step ---
-def _make_step(cfg: FleetConfig, params: RunParams, group_pairs: jax.Array):
-    RK, S, W, Q, C = (cfg.n_racks, cfg.n_servers, cfg.n_workers,
-                      cfg.queue_cap, cfg.n_clients)
-    ST = RK * S                  # fabric-global server count
-    T = cfg.n_filter_tables
-    A = cfg.max_arrivals
-    D = 2 * A                    # delivery lanes: originals then clones
-    K = min(cfg.max_responses, ST * W)  # response lanes after compaction
-    dt = jnp.float32(cfg.dt_us)
-    srv_ids = jnp.arange(ST)
-    # in-network constants added to every recorded latency (client TX + four
-    # link hops + two pipeline passes + the spine tier's round trip when the
-    # fabric has one; client-duplicating policies — C-Clone and any custom
-    # registration flagged client_dup — pay the doubled sender cost)
-    const_lat = (cfg.client_tx_us + 4 * cfg.link_us + 2 * cfg.pipeline_pass_us
-                 + cfg.spine_extra_us
-                 + jnp.where(id_mask(params.policy_id,
-                                     registry.client_dup_ids()),
-                             cfg.client_tx_us, 0.0))
-    xhop = jnp.float32(cfg.interrack_extra_us)
-    t0_us = jnp.float32(cfg.warmup_us)
-    t1_us = jnp.float32(cfg.duration_us)
-    log_g = float(np.log(cfg.hist_growth))
-
-    def step(state: FleetState, xs):
-        tick, n_raw = xs
-        m = state.metrics
-        t_us = tick.astype(jnp.float32) * dt
-        down = (tick >= params.fail_from_tick) & (tick < params.fail_until_tick)
-        switch = state.switch
-        dedup = state.dedup
-        # §3.6 recovery: all soft state lost, REQ_IDs restart from 1; the
-        # clients' pending-request fingerprints of lost requests go with it
-        recover = tick == params.fail_until_tick
-        switch = jax.tree.map(
-            lambda b: jnp.where(recover, jnp.zeros_like(b), b), switch)
-        dedup = jnp.where(recover, jnp.zeros_like(dedup), dedup)
-        # flat views of the rack-major state (reshape is free and keeps every
-        # per-server op identical to the single-ToR engine)
-        sstate = switch.server_state.reshape(ST)
-        tables = switch.filter_tables.reshape((RK + 1) * T,
-                                              cfg.n_filter_slots)
-
-        key, k_arr, k_exec = jax.random.split(state.key, 3)
-
-        # -- arrivals (Poisson count precomputed outside the scan) -------
-        n_arr = jnp.minimum(n_raw, A)
-        arr_active = jnp.arange(A) < n_arr
-        m = m._replace(n_truncated=m.n_truncated + (n_raw - n_arr),
-                       n_dropped_down=m.n_dropped_down
-                       + jnp.where(down, n_arr, 0))
-        arr_active &= ~down
-        m = m._replace(n_arrivals=m.n_arrivals + arr_active.sum())
-
-        # one uniform block covers every per-lane attribute draw (the home-
-        # rack column only exists when there is more than one rack, so the
-        # n_racks == 1 stream matches the single-ToR engine draw for draw)
-        u = jax.random.uniform(k_arr, (A, 7 if RK > 1 else 6))
-        def to_int(col, n):
-            return jnp.minimum((u[:, col] * n).astype(jnp.int32), n - 1)
-        grp = to_int(0, cfg.n_groups)
-        fidx = to_int(1, T)
-        client = to_int(2, C)
-        base = _intrinsic(cfg, u[:, 3])
-        r1 = to_int(4, S)
-        r2 = (r1 + 1 + to_int(5, S - 1)) % S
-        if RK > 1:
-            # inverse-CDF pick over the (possibly skewed) rack weights
-            cw = jnp.cumsum(params.rack_weights)
-            home = jnp.searchsorted(cw, u[:, 6] * cw[-1],
-                                    side="right").astype(jnp.int32)
-            home = jnp.minimum(home, RK - 1)
-        else:
-            home = jnp.zeros(A, jnp.int32)
-        off = home * S               # local → fabric-global server ids
-        pair = group_pairs[grp] + off[:, None]
-
-        dst1, dst2, cloned, clo1, clo2 = route_fabric(
-            params.policy_id, sstate, pair, off + r1, off + r2, home, r2,
-            n_racks=RK, n_servers=S)
-        xrack = cloned & ((dst1 // S) != (dst2 // S))
-        # the filter switch of a pair: its home rack ToR, or the spine
-        # (table group RK) when the copies span racks
-        frack = jnp.where(xrack, jnp.int32(RK), home)
-        req_id = switch.seq + 1 + jnp.arange(A, dtype=jnp.int32)
-        switch = switch._replace(seq=switch.seq + jnp.int32(A))
-        m = m._replace(
-            n_cloned=m.n_cloned + (arr_active & cloned).sum(),
-            n_interrack_cloned=m.n_interrack_cloned
-            + (arr_active & xrack).sum())
-
-        # delivery lanes: clone copies sort after originals, mirroring the
-        # recirculated clone leaving the pipeline second; the remote copy of
-        # an inter-rack pair carries its spine detour as a per-copy hop term
-        d_dst = jnp.concatenate([dst1, dst2]).astype(jnp.int32)
-        d_clo = jnp.concatenate([clo1, clo2])
-        d_act = jnp.concatenate([arr_active, arr_active & cloned])
-        d_hop = jnp.concatenate([jnp.zeros(A, jnp.float32),
-                                 jnp.where(xrack, xhop, 0.0)])
-
-        # -- workers advance, completions (busy ⇔ REM > 0) ---------------
-        meta = state.workers.meta.reshape(ST, W, WF)
-        was_busy = meta[:, :, WF_REM] > 0
-        rem = jnp.where(was_busy, meta[:, :, WF_REM] - dt, 0.0)
-        done = was_busy & (rem <= 0)                     # (ST, W)
-        busy_after = was_busy & ~done
-        n_free = (~busy_after).sum(axis=1)               # (ST,)
-        rq = state.queues
-        q_head = rq.head.reshape(ST)
-        n_queued = rq.count.reshape(ST)
-
-        # -- CLO=2 drop rule --------------------------------------------
-        # A clone is dropped iff the server's *wait queue* is non-empty when
-        # it arrives.  This tick's completions drain min(n_free, n_queued)
-        # jobs first; earlier arrival lanes to the same server then occupy
-        # the leftover free workers before queuing.  Two passes resolve the
-        # (rare) dependence of one clone's fate on an earlier clone's.
-        q_left = jnp.maximum(n_queued - n_free, 0)       # still waiting
-        free_left = jnp.maximum(n_free - n_queued, 0)    # still free
-        onehot = (d_dst[None, :] == srv_ids[:, None])    # (ST, D)
-        is_clone = d_clo == CLO_CLONE
-        n_earlier = _rank_among_earlier(onehot & (d_act & ~is_clone)[None, :])
-        occupied = (q_left[d_dst] > 0) | \
-            (jnp.take_along_axis(n_earlier, d_dst[None, :], axis=0)[0]
-             > free_left[d_dst])
-        drop0 = is_clone & d_act & occupied
-        keep0 = d_act & ~drop0
-        n_earlier1 = _rank_among_earlier(onehot & keep0[None, :])
-        occupied1 = (q_left[d_dst] > 0) | \
-            (jnp.take_along_axis(n_earlier1, d_dst[None, :], axis=0)[0]
-             > free_left[d_dst])
-        clone_drop = is_clone & d_act & occupied1
-        d_keep = d_act & ~clone_drop
-        m = m._replace(n_clone_drops=m.n_clone_drops + clone_drop.sum())
-
-        # -- enqueue into the FCFS rings ---------------------------------
-        # the r-th kept lane for a server lands r slots past its tail
-        lane_m = onehot & d_keep[None, :]                # (ST, D)
-        lane_rank = _rank_among_earlier(lane_m)          # (ST, D)
-        rank_own = jnp.take_along_axis(lane_rank, d_dst[None, :], axis=0)[0]
-        ovf = d_keep & (n_queued[d_dst] + rank_own >= Q)
-        m = m._replace(n_overflow=m.n_overflow + ovf.sum())
-        enq_ok = d_keep & ~ovf
-        slot = (q_head[d_dst] + n_queued[d_dst] + rank_own) % Q
-        payload = jnp.stack([                            # (D, QF)
-            jnp.tile(base, 2),
-            jnp.full(D, t_us),
-            jnp.tile(req_id, 2).astype(jnp.float32),
-            d_clo.astype(jnp.float32),
-            jnp.tile(fidx, 2).astype(jnp.float32),
-            jnp.tile(client, 2).astype(jnp.float32),
-            d_hop,
-            jnp.tile(frack, 2).astype(jnp.float32),
-        ], axis=1)
-        flat_q = rq.data.reshape(ST * Q, QF)
-        qrow = jnp.where(enq_ok, d_dst * Q + slot, jnp.int32(ST * Q))
-        flat_q = flat_q.at[qrow].set(payload, mode="drop")
-        count1 = n_queued + (onehot & enq_ok[None, :]).sum(axis=1)
-
-        # -- dequeue: ring head onto free workers ------------------------
-        R = min(W, Q)
-        n_start = jnp.minimum(count1, n_free)            # (ST,)
-        r = jnp.arange(R)
-        startm = r[None, :] < n_start[:, None]           # (ST, R)
-        deq_slot = (q_head[:, None] + r[None, :]) % Q    # (ST, R)
-        job = flat_q[srv_ids[:, None] * Q + deq_slot]    # (ST, R, QF)
-        # r-th free worker of each server, via rank matching (no sort)
-        wfree = ~busy_after
-        wrank = _rank_among_earlier(wfree)               # (ST, W)
-        sel = (wfree[:, None, :]
-               & (wrank[:, None, :] == r[None, :, None]))  # (ST, R, W)
-        wcol = jnp.einsum("srw,w->sr", sel.astype(jnp.int32), jnp.arange(W))
-        start_base = job[:, :, QF_BASE]
-        exec_dur = _execute(cfg, k_exec, start_base) * params.slowdown[:, None]
-        wrow = jnp.where(startm, srv_ids[:, None] * W + wcol,
-                         jnp.int32(ST * W))
-        # responses are read from the PRE-overwrite worker metadata
-        meta_flat = jnp.concatenate(
-            [jnp.where(busy_after, rem, 0.0)[:, :, None],
-             meta[:, :, 1:]], axis=2).reshape(ST * W, WF)
-        new_meta = jnp.stack([
-            exec_dur + cfg.server_overhead_us,
-            job[:, :, QF_TARR], job[:, :, QF_RID], job[:, :, QF_CLO],
-            job[:, :, QF_IDX], job[:, :, QF_CLIENT],
-            job[:, :, QF_HOP], job[:, :, QF_FRACK]], axis=2)   # (ST, R, WF)
-        worker_meta = meta_flat.at[wrow.reshape(-1)].set(
-            new_meta.reshape(-1, WF), mode="drop").reshape(ST, W, WF)
-        q_count = count1 - n_start
-        queues = rq._replace(head=((q_head + n_start) % Q).reshape(RK, S),
-                             count=q_count.reshape(RK, S),
-                             data=flat_q.reshape(RK, S, Q, QF))
-
-        # -- compact completions into the response lanes -----------------
-        done_flat = done.reshape(-1)                     # (ST·W,)
-        m = m._replace(
-            n_resp=m.n_resp + done_flat.sum(),
-            n_resp_empty=m.n_resp_empty
-            + (done_flat & (jnp.repeat(q_count, W) == 0)).sum(),
-            lost_down_resp=m.lost_down_resp
-            + jnp.where(down, done_flat.sum(), 0))
-        rrank = jnp.cumsum(done_flat) - done_flat.astype(jnp.int32)
-        clipped = done_flat & (rrank >= K)
-        m = m._replace(n_resp_clipped=m.n_resp_clipped + clipped.sum())
-        krow = jnp.where(done_flat & ~clipped, rrank, jnp.int32(K))
-        resp_payload = jnp.concatenate([                 # (ST·W, WF + 2)
-            meta_flat,
-            jnp.repeat(srv_ids, W).astype(jnp.float32)[:, None],
-            jnp.repeat(q_count, W).astype(jnp.float32)[:, None]], axis=1)
-        resp = jnp.zeros((K, WF + 2), jnp.float32).at[krow].set(
-            resp_payload, mode="drop")
-        n_done = jnp.minimum(done_flat.sum(), K)
-        resp_active = (jnp.arange(K) < n_done) & ~down
-        resp_rid = resp[:, WF_RID].astype(jnp.int32)
-        resp_clo = resp[:, WF_CLO].astype(jnp.int32)
-        resp_idx = resp[:, WF_IDX].astype(jnp.int32)
-        resp_client = resp[:, WF_CLIENT].astype(jnp.int32)
-        resp_tarr = resp[:, WF_TARR]
-        resp_hop = resp[:, WF_HOP]
-        resp_frack = resp[:, WF_FRACK].astype(jnp.int32)
-        resp_sid = resp[:, WF].astype(jnp.int32)
-        resp_qlen = resp[:, WF + 1].astype(jnp.int32)
-
-        # -- switch response path ---------------------------------------
-        # each response updates its own rack switch's StateT and runs the
-        # fingerprint filter at the pair's filter switch; flattening the
-        # (rack | spine) × table axes lets one call serve the whole fabric
-        idx_flat = resp_frack * T + resp_idx
-        sstate, tables, drop = _filter_responses(
-            cfg, sstate, tables, resp_rid, idx_flat, resp_clo, resp_sid,
-            resp_qlen, resp_active)
-        switch = switch._replace(
-            server_state=sstate.reshape(RK, S),
-            filter_tables=tables.reshape(RK + 1, T, cfg.n_filter_slots))
-        m = m._replace(
-            n_filtered=m.n_filtered + (drop & resp_active).sum(),
-            n_spine_filtered=m.n_spine_filtered
-            + (drop & resp_active & (resp_frack == RK)).sum())
-
-        # -- clients ------------------------------------------------------
-        deliver = resp_active & ~drop
-        dedup, redundant, evicted = dedup_tick(dedup, resp_rid, deliver)
-        first = deliver & ~redundant
-        m = m._replace(n_redundant=m.n_redundant + redundant.sum(),
-                       n_dedup_evicted=m.n_dedup_evicted + evicted,
-                       n_completed=m.n_completed + first.sum())
-        # receiver threads: FCFS backlog with per-response RX cost
-        cli_onehot = (resp_client[None, :] == jnp.arange(C)[:, None]) \
-            & deliver[None, :]                           # (C, K)
-        pos = jnp.take_along_axis(_rank_among_earlier(cli_onehot),
-                                  resp_client[None, :], axis=0)[0]
-        backlog_pre = jnp.maximum(state.client_backlog - dt, 0.0)
-        wait = backlog_pre[resp_client] + (pos + 1) * cfg.client_rx_us
-        backlog = backlog_pre + cli_onehot.sum(axis=1) * cfg.client_rx_us
-        t_fin = t_us + wait
-        lat = t_fin - resp_tarr + const_lat + resp_hop
-        rec = first & (t_fin >= t0_us) & (t_fin <= t1_us)
-        bins = jnp.clip((jnp.log(jnp.maximum(lat, cfg.hist_lo_us)
-                                 / cfg.hist_lo_us) / log_g),
-                        0, cfg.hist_bins - 1).astype(jnp.int32)
-        bins = jnp.where(rec, bins, cfg.hist_bins)
-        # per-rack histograms, binned by the rack that served the winning
-        # response (non-recorded lanes scatter out of bounds and drop)
-        m = m._replace(hist=m.hist.at[resp_sid // S, bins].add(1, mode="drop"),
-                       n_completed_win=m.n_completed_win + rec.sum())
-
-        return FleetState(switch=switch, dedup=dedup, queues=queues,
-                          workers=state.workers._replace(meta=worker_meta
-                                                         .reshape(RK, S, W,
-                                                                  WF)),
-                          client_backlog=backlog,
-                          key=key, metrics=m), None
-
-    return step
-
-
-def _filter_responses(cfg, server_state, tables, rid, idx, clo, sid, qlen,
-                      active):
-    """Response path over the flattened fabric: StateT/ShadowT update + the
-    fingerprint filter, with the backend chosen at compile time.
-
-    ``server_state`` is the flat ``(n_racks·S,)`` tracked view, ``tables``
-    the flat ``((n_racks+1)·n_tables, n_slots)`` stack of every rack's
-    filter group plus the spine's, and ``idx`` pre-offset into it — so a
-    lane's (req_id, idx) group is unique per filter switch and the one-call
-    semantics match per-switch sequential filtering exactly.
-    """
-    if cfg.filter_backend == "vectorized":
-        st = SwitchState(seq=jnp.zeros((), jnp.int32),
-                         server_state=server_state, filter_tables=tables)
-        new_st, res = filter_tick_vectorized(st, rid, idx, clo, sid, qlen,
-                                             active)
-        return new_st.server_state, new_st.filter_tables, res.drop
-    # scan / pallas: update server state via a masked scatter, then run the
-    # table update with inactive lanes neutralised (CLO=0 never touches it)
-    sid_m = jnp.where(active, sid, jnp.int32(server_state.shape[0]))
-    server_state = server_state.at[sid_m].set(
-        qlen.astype(jnp.int32), mode="drop")
-    clo_m = jnp.where(active, clo, 0).astype(jnp.int32)
-    if cfg.filter_backend == "scan":
-        tables, drop = jax.lax.scan(
-            _filter_step, tables,
-            (rid.astype(jnp.int32), idx.astype(jnp.int32), clo_m))
-    else:  # pallas — the VMEM-resident fingerprint kernel
-        from repro.kernels.ops import fingerprint_filter
-
-        tables, drop = fingerprint_filter(
-            tables, rid.astype(jnp.int32), idx.astype(jnp.int32), clo_m)
-    return server_state, tables, drop
-
-
 # ------------------------------------------------------------------ runner --
 def _simulate_core(cfg: FleetConfig, params: RunParams) -> Metrics:
     gp = group_pairs_array(cfg.n_servers)
     k_pois, k0 = jax.random.split(jax.random.PRNGKey(params.seed))
     state = init_fleet_state(cfg, k0)
-    step = _make_step(cfg, params, gp)
+    step = build_step(cfg, params, gp)
     ticks = jnp.arange(cfg.n_ticks, dtype=jnp.int32)
     if cfg.arrival == "trace":
         # replayed per-tick arrival counts ride in as the scan xs

@@ -47,6 +47,12 @@ class FleetResult:
     n_dropped_down: int        # arrivals lost while the switch was dark
     n_dedup_evicted: int       # live client fingerprints lost to collisions
     empty_queue_fraction: float
+    # staged-pipeline counters (nonzero only for coordinator / hedge runs)
+    n_coord_queued: int = 0    # requests parked at the coordinator node
+    n_coord_overflow: int = 0  # … lost to coordinator-ring exhaustion
+    n_hedges_armed: int = 0    # timer-wheel entries armed
+    n_hedges_cancelled: int = 0  # … cancelled (earlier response / fabric dark)
+    n_wheel_dropped: int = 0   # … lost to wheel-slot exhaustion
     rack_completed: tuple[int, ...] = ()       # in-window, by serving rack
     rack_p50_us: tuple[float, ...] = ()
     rack_p99_us: tuple[float, ...] = ()
@@ -72,6 +78,9 @@ class FleetResult:
             "spine_filtered": self.n_spine_filtered,
             "clone_drops": self.n_clone_drops,
             "redundant": self.n_redundant_at_client,
+            "coord_queued": self.n_coord_queued,
+            "coord_overflow": self.n_coord_overflow,
+            "hedges_armed": self.n_hedges_armed,
             "empty_q": round(self.empty_queue_fraction, 3),
             "rack_completed": list(self.rack_completed),
             "rack_p50_us": [round(v, 1) for v in self.rack_p50_us],
@@ -132,6 +141,11 @@ def summarize(cfg: FleetConfig, metrics, *, policy: str, load: float,
         n_dedup_evicted=int(metrics.n_dedup_evicted),
         empty_queue_fraction=(int(metrics.n_resp_empty) / n_resp
                               if n_resp else 1.0),
+        n_coord_queued=int(metrics.n_coord_queued),
+        n_coord_overflow=int(metrics.n_coord_overflow),
+        n_hedges_armed=int(metrics.n_hedges_armed),
+        n_hedges_cancelled=int(metrics.n_hedges_cancelled),
+        n_wheel_dropped=int(metrics.n_wheel_dropped),
         rack_completed=tuple(int(r.sum()) for r in rack_hist),
         rack_p50_us=tuple(hist_percentile(r, mids, 50.0) for r in rack_hist),
         rack_p99_us=tuple(hist_percentile(r, mids, 99.0) for r in rack_hist),

@@ -75,13 +75,67 @@ def _route_ncrs(server_state, pair, r1, r2):
     return dst1, s2, cloned, clo1, clo2
 
 
+def _route_laedge(server_state, pair, r1, r2):
+    # LÆDGE never dispatches at the switch: the engine parks these lanes at
+    # the coordinator node (stage_coordinator) and this branch only shapes
+    # the lax.switch table.  Copies are CLO_ORIG: ordinary at the servers
+    # (no CLO=2 drop), paired at the filter so the slower response is
+    # absorbed exactly where the DES coordinator's seen-set absorbs it.
+    a = r1.shape[0]
+    clo = jnp.full(a, CLO_ORIG, jnp.int32)
+    return r1, r2, jnp.zeros(a, bool), clo, clo
+
+
+def _route_hedge(server_state, pair, r1, r2):
+    # delayed hedging: the original goes to Srv1 of the GrpT pair NOW with
+    # CLO_ORIG (its response must park a fingerprint — that is both the
+    # filter pairing and the timer-cancel signal); the duplicate is armed
+    # into the timer wheel (stage_hedge_timer), not dispatched here
+    s1 = pair[:, 0]
+    a = s1.shape[0]
+    clo1 = jnp.full(a, CLO_ORIG, jnp.int32)
+    clo2 = jnp.full(a, CLO_CLONE, jnp.int32)      # inert: clone lane inactive
+    return s1, pair[:, 1], jnp.zeros(a, bool), clo1, clo2
+
+
+def _nth_idle(idle, n):
+    """Fabric-global id of the ``n``-th idle server (rank matching)."""
+    ranks = jnp.cumsum(idle) - idle.astype(jnp.int32)
+    return jnp.argmax(idle & (ranks == n)).astype(jnp.int32)
+
+
+def laedge_coordinator(idle, n_idle, u1, u2):
+    """LÆDGE's dispatch rule, per drained coordinator-queue entry: two
+    *distinct random* idle servers when ≥ 2 are idle (clone), the single
+    idle one when exactly one is — mirroring the DES coordinator's
+    ``rng.choice`` over its idle set.  With 0 idle the engine keeps the
+    entry queued (``can`` is False), so the returned ids are inert."""
+    n1 = jnp.maximum(n_idle, 1)
+    i1 = jnp.minimum((u1 * n1).astype(jnp.int32), n1 - 1)
+    off = (u2 * jnp.maximum(n_idle - 1, 1)).astype(jnp.int32)
+    i2 = jnp.where(n_idle > 1,
+                   (i1 + 1 + jnp.minimum(off, n_idle - 2)) % n1, i1)
+    return _nth_idle(idle, i1), _nth_idle(idle, i2), n_idle >= 2
+
+
+def hedge_deferred_dst(pair, r1, r2):
+    """The hedge duplicate races Srv2 of the same GrpT pair the original
+    went to — identical to the DES ``HedgePolicy`` pairing."""
+    return pair[:, 1]
+
+
 # attach the array branches to the registry entries core.policies created —
-# a policy now lives in ONE table shared by both engines
+# a policy now lives in ONE table shared by both engines.  laedge and
+# hedge additionally attach their pipeline-stage hooks: that single line is
+# their whole FleetSim integration (the engine's coordinator / timer-wheel
+# machinery is policy-agnostic).
 registry.attach_route("baseline", _route_baseline)
 registry.attach_route("c-clone", _route_cclone)
 registry.attach_route("netclone", _route_netclone)
 registry.attach_route("racksched", _route_racksched)
 registry.attach_route("netclone+racksched", _route_ncrs)
+registry.attach_route("laedge", _route_laedge, coordinator=laedge_coordinator)
+registry.attach_route("hedge", _route_hedge, hedge_timer=hedge_deferred_dst)
 
 
 def default_spine_place(rack_load, server_state, home, r1, r2, remote_cand,

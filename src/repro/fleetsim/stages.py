@@ -1,0 +1,843 @@
+"""The staged tick pipeline: FleetSim's tick as composable pure stages.
+
+One engine tick is the composition
+
+    arrival → route (ToR + spine) → coordinator → hedge_timer
+            → server → response/filter → client
+
+where every stage is a pure function ``(cfg, params, state, ctx) ->
+(state, ctx)`` over the same :class:`~repro.fleetsim.state.FleetState` the
+monolithic step used to carry — the refactor moves code, not semantics.
+Stages communicate through two small typed contexts:
+
+* :class:`Arrivals` — this tick's admitted arrival lanes and their
+  pre-drawn attributes (candidates, service demand, filter index, …), plus
+  the flattened fabric views every later stage reads;
+* :class:`Lanes` — the delivery lanes headed for the servers: destination,
+  activity mask, and the full ``QF``-format queue payload per lane.  The
+  route stage emits ``2 × max_arrivals`` base lanes (originals then
+  clones); the coordinator and hedge stages *append* their dispatches.
+
+Two stages are **compile-time optional**, gated by static
+:class:`~repro.fleetsim.config.FleetConfig` flags rather than runtime
+branches, so a flag-off program contains zero ops from them and the
+``n_racks == 1`` goldens of the always-on policies stay bit-identical:
+
+* ``stage_coordinator`` (``cfg.coordinator``) — the LÆDGE coordinator
+  node: arrival lanes of policies registered with a ``coordinator`` hook
+  are parked in a ring buffer and drained each tick by the hook's rule
+  (clone to two random idle servers iff ≥ 2 are idle, forward to one when
+  exactly one is, queue otherwise), throttled by a CPU-credit model that
+  reproduces the DES coordinator's serialized ``coord_cpu_us``-per-packet
+  bottleneck;
+* ``stage_hedge_timer`` (``cfg.hedge_timer``) — a fixed-depth timer wheel:
+  policies registered with a ``hedge_timer`` hook arm a deferred duplicate
+  at arrival; ``hedge_delay_us`` later the wheel fires it as a CLO=2 copy
+  unless the original's response already passed the filter switch (the
+  parked fingerprint doubles as the DES's cancel-on-first-response).
+
+Both sub-states live in ``FleetState.coord`` / ``FleetState.wheel`` and are
+``None`` when their stage is compiled out.  Policy-specific behaviour
+enters exclusively through the unified registry
+(``repro.scenarios.registry``): the route branch table, the coordinator
+dispatch rules, and the hedge destinations are all ``lax.switch`` tables
+built from it at trace time — registering a policy with the right hooks is
+the whole integration.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.header import CLO_CLONE, CLO_ORIG
+from repro.core.switch_jax import (
+    SwitchState,
+    _filter_step,
+    filter_tick_vectorized,
+    fingerprint_hash_jax,
+)
+from repro.fleetsim.config import (
+    SERVICE_BIMODAL,
+    SERVICE_EXPONENTIAL,
+    SERVICE_PARETO,
+    FleetConfig,
+)
+from repro.fleetsim.policies import dedup_tick, id_mask, route_fabric
+from repro.fleetsim.state import (
+    QF,
+    QF_BASE,
+    QF_CLIENT,
+    QF_CLO,
+    QF_FRACK,
+    QF_HOP,
+    QF_IDX,
+    QF_RID,
+    QF_TARR,
+    WF,
+    WF_CLIENT,
+    WF_CLO,
+    WF_FRACK,
+    WF_HOP,
+    WF_IDX,
+    WF_REM,
+    WF_RID,
+    WF_TARR,
+    WH,
+    WHEEL_BASE,
+    WHEEL_CLIENT,
+    WHEEL_DST,
+    WHEEL_FRACK,
+    WHEEL_IDX,
+    WHEEL_RID,
+    WHEEL_TARR,
+    FleetState,
+    HedgeWheel,
+)
+from repro.scenarios import registry
+
+
+# --------------------------------------------------------------- sampling ---
+def _intrinsic(cfg: FleetConfig, u):
+    """Per-request base demand (shared by both copies of a clone pair),
+    from a pre-drawn uniform in [0, 1)."""
+    p = cfg.service.params
+    if cfg.service.kind == SERVICE_EXPONENTIAL:
+        return jnp.full(u.shape, p[0], jnp.float32)
+    if cfg.service.kind == SERVICE_BIMODAL:
+        short, long, p_long = p
+        return jnp.where(u < p_long, long, short).astype(jnp.float32)
+    if cfg.service.kind == SERVICE_PARETO:
+        xm, alpha, cap = p
+        u = jnp.minimum(u, 1.0 - 1e-7)
+        r = (xm / cap) ** alpha
+        return (xm / (1.0 - u * (1.0 - r)) ** (1.0 / alpha)).astype(jnp.float32)
+    raise ValueError(cfg.service.kind)
+
+
+def _execute(cfg: FleetConfig, key, base):
+    """One execution's runtime: per-copy randomness + the jitter spike.
+    One uniform draw feeds both (inverse-CDF), keeping the tick cheap."""
+    u = jax.random.uniform(key, base.shape + (2,))
+    if cfg.service.kind == SERVICE_EXPONENTIAL:
+        # dummy-RPC spin drawn at the server (§5.1.2)
+        dur = -jnp.log1p(-u[..., 0] * (1.0 - 1e-7)) * base
+    else:
+        dur = base * (0.9 + 0.2 * u[..., 0])
+    spike = u[..., 1] < cfg.service.jitter_p
+    return jnp.where(spike, dur * cfg.service.jitter_mult, dur)
+
+
+def _rank_among_earlier(mask_2d):
+    """For (S, L) masks: count of earlier True lanes in the same row."""
+    c = jnp.cumsum(mask_2d.astype(jnp.int32), axis=-1)
+    return c - mask_2d.astype(jnp.int32)
+
+
+def _rank(mask_1d):
+    """Rank of each True among earlier Trues of a (L,) mask."""
+    m = mask_1d.astype(jnp.int32)
+    return jnp.cumsum(m) - m
+
+
+# ----------------------------------------------------------------- contexts --
+class Arrivals(NamedTuple):
+    """Per-tick arrival context: admitted lanes + flattened fabric views."""
+
+    tick: jax.Array        # () int32
+    t_us: jax.Array        # () f32
+    down: jax.Array        # () bool — fabric dark this tick
+    k_exec: jax.Array      # PRNG key for the server stage's execution draws
+    k_stage: jax.Array     # PRNG key for optional-stage randomness
+    sstate: jax.Array      # (ST,) flat tracked queue lengths
+    tables: jax.Array      # ((RK+1)·T, slots) flat filter-table stack
+    active: jax.Array      # (A,) admitted arrival lanes
+    grp: jax.Array         # (A,) GrpT index
+    fidx: jax.Array        # (A,) filter-table index within a group
+    client: jax.Array      # (A,) client id
+    base: jax.Array        # (A,) intrinsic service demand (µs)
+    home: jax.Array        # (A,) home rack
+    pair: jax.Array        # (A, 2) GrpT pair, fabric-global ids
+    r1: jax.Array          # (A,) first uniform candidate, fabric-global
+    r2: jax.Array          # (A,) second uniform candidate, fabric-global
+    r2_local: jax.Array    # (A,) second candidate, rack-local
+
+
+class Routed(NamedTuple):
+    """Route-stage outputs consumed by the optional stages."""
+
+    req_id: jax.Array      # (A,) spine-assigned REQ_IDs
+    cloned: jax.Array      # (A,) immediate-clone mask
+    frack: jax.Array       # (A,) filter switch (home rack or spine)
+
+
+class Lanes(NamedTuple):
+    """Delivery lanes headed for the server stage.
+
+    ``payload`` rows are ``QF``-format queue records; ``clo`` is kept as a
+    separate int view (it also drives the CLO=2 drop rule).  Optional
+    stages append their dispatches with :meth:`extend`.
+    """
+
+    dst: jax.Array         # (D,) int32 destination server, fabric-global
+    act: jax.Array         # (D,) bool
+    clo: jax.Array         # (D,) int32
+    payload: jax.Array     # (D, QF) f32
+
+    def extend(self, dst, act, clo, payload) -> "Lanes":
+        return Lanes(
+            dst=jnp.concatenate([self.dst, dst.astype(jnp.int32)]),
+            act=jnp.concatenate([self.act, act]),
+            clo=jnp.concatenate([self.clo, clo.astype(jnp.int32)]),
+            payload=jnp.concatenate([self.payload, payload], axis=0),
+        )
+
+
+class Responses(NamedTuple):
+    """Compacted completion lanes leaving the server stage."""
+
+    active: jax.Array      # (K,) bool
+    rid: jax.Array
+    clo: jax.Array
+    idx: jax.Array
+    client: jax.Array
+    tarr: jax.Array
+    hop: jax.Array
+    frack: jax.Array
+    sid: jax.Array
+    qlen: jax.Array
+
+
+# ------------------------------------------------------------------- stages --
+def stage_arrival(cfg: FleetConfig, params, state: FleetState, xs):
+    """Admission + attribute draws: recovery wipe, Poisson/trace lane
+    masking, and the one uniform block covering every per-lane attribute
+    (the ``n_racks == 1`` column layout matches the single-ToR engine draw
+    for draw)."""
+    RK, S, C = cfg.n_racks, cfg.n_servers, cfg.n_clients
+    ST = RK * S
+    T = cfg.n_filter_tables
+    A = cfg.max_arrivals
+    dt = jnp.float32(cfg.dt_us)
+
+    tick, n_raw = xs
+    m = state.metrics
+    t_us = tick.astype(jnp.float32) * dt
+    down = (tick >= params.fail_from_tick) & (tick < params.fail_until_tick)
+    switch = state.switch
+    dedup = state.dedup
+    # §3.6 recovery: all soft state lost, REQ_IDs restart from 1; the
+    # clients' pending-request fingerprints of lost requests go with it
+    recover = tick == params.fail_until_tick
+    switch = jax.tree.map(
+        lambda b: jnp.where(recover, jnp.zeros_like(b), b), switch)
+    dedup = jnp.where(recover, jnp.zeros_like(dedup), dedup)
+    wheel = state.wheel
+    if cfg.hedge_timer:
+        # pending hedge timers are switch soft state too (the DES wipes the
+        # policy's outstanding map on failure)
+        wheel = jax.tree.map(
+            lambda b: jnp.where(recover, jnp.zeros_like(b), b), wheel)
+    # the coordinator node is NOT wiped: it is a server-side CPU box, not
+    # switch soft state (matching the DES, whose coordinator queue and
+    # outstanding counts survive a switch failure)
+    # flat views of the rack-major state (reshape is free and keeps every
+    # per-server op identical to the single-ToR engine)
+    sstate = switch.server_state.reshape(ST)
+    tables = switch.filter_tables.reshape((RK + 1) * T, cfg.n_filter_slots)
+
+    key, k_arr, k_exec = jax.random.split(state.key, 3)
+    k_stage = jax.random.fold_in(k_arr, 1)
+
+    # -- arrivals (Poisson count precomputed outside the scan) -------
+    n_arr = jnp.minimum(n_raw, A)
+    arr_active = jnp.arange(A) < n_arr
+    m = m._replace(n_truncated=m.n_truncated + (n_raw - n_arr),
+                   n_dropped_down=m.n_dropped_down
+                   + jnp.where(down, n_arr, 0))
+    arr_active &= ~down
+    m = m._replace(n_arrivals=m.n_arrivals + arr_active.sum())
+
+    # one uniform block covers every per-lane attribute draw (the home-
+    # rack column only exists when there is more than one rack, so the
+    # n_racks == 1 stream matches the single-ToR engine draw for draw)
+    u = jax.random.uniform(k_arr, (A, 7 if RK > 1 else 6))
+
+    def to_int(col, n):
+        return jnp.minimum((u[:, col] * n).astype(jnp.int32), n - 1)
+
+    grp = to_int(0, cfg.n_groups)
+    fidx = to_int(1, T)
+    client = to_int(2, C)
+    base = _intrinsic(cfg, u[:, 3])
+    r1 = to_int(4, S)
+    r2 = (r1 + 1 + to_int(5, S - 1)) % S
+    if RK > 1:
+        # inverse-CDF pick over the (possibly skewed) rack weights
+        cw = jnp.cumsum(params.rack_weights)
+        home = jnp.searchsorted(cw, u[:, 6] * cw[-1],
+                                side="right").astype(jnp.int32)
+        home = jnp.minimum(home, RK - 1)
+    else:
+        home = jnp.zeros(A, jnp.int32)
+    off = home * S               # local → fabric-global server ids
+    state = state._replace(switch=switch, dedup=dedup, key=key,
+                           metrics=m, wheel=wheel)
+    return state, Arrivals(
+        tick=tick, t_us=t_us, down=down, k_exec=k_exec, k_stage=k_stage,
+        sstate=sstate, tables=tables, active=arr_active, grp=grp, fidx=fidx,
+        client=client, base=base, home=home,
+        pair=None,               # GrpT lookup happens in stage_route
+        r1=off + r1, r2=off + r2, r2_local=r2)
+
+
+def stage_route(cfg: FleetConfig, params, state: FleetState, arr: Arrivals,
+                group_pairs: jax.Array, xhop: jax.Array):
+    """ToR routing + spine placement: every arrival lane's home rack switch
+    decides locally (``route_fabric``), the spine upgrades saturated
+    ``spine_clone`` lanes to inter-rack clones and assigns fabric-global
+    REQ_IDs; emits the base delivery-lane group (originals then clones)."""
+    RK, S = cfg.n_racks, cfg.n_servers
+    A = cfg.max_arrivals
+    D = 2 * A
+    m = state.metrics
+    switch = state.switch
+    arr_active = arr.active
+
+    pair = group_pairs[arr.grp] + (arr.home * S)[:, None]
+    dst1, dst2, cloned, clo1, clo2 = route_fabric(
+        params.policy_id, arr.sstate, pair, arr.r1, arr.r2, arr.home,
+        arr.r2_local, n_racks=RK, n_servers=S)
+    xrack = cloned & ((dst1 // S) != (dst2 // S))
+    # the filter switch of a pair: its home rack ToR, or the spine
+    # (table group RK) when the copies span racks
+    frack = jnp.where(xrack, jnp.int32(RK), arr.home)
+    req_id = switch.seq + 1 + jnp.arange(A, dtype=jnp.int32)
+    switch = switch._replace(seq=switch.seq + jnp.int32(A))
+    m = m._replace(
+        n_cloned=m.n_cloned + (arr_active & cloned).sum(),
+        n_interrack_cloned=m.n_interrack_cloned
+        + (arr_active & xrack).sum())
+
+    # delivery lanes: clone copies sort after originals, mirroring the
+    # recirculated clone leaving the pipeline second; the remote copy of
+    # an inter-rack pair carries its spine detour as a per-copy hop term
+    d_dst = jnp.concatenate([dst1, dst2]).astype(jnp.int32)
+    d_clo = jnp.concatenate([clo1, clo2])
+    d_act = jnp.concatenate([arr_active, arr_active & cloned])
+    d_hop = jnp.concatenate([jnp.zeros(A, jnp.float32),
+                             jnp.where(xrack, xhop, 0.0)])
+    payload = jnp.stack([                            # (D, QF)
+        jnp.tile(arr.base, 2),
+        jnp.full(D, arr.t_us),
+        jnp.tile(req_id, 2).astype(jnp.float32),
+        d_clo.astype(jnp.float32),
+        jnp.tile(arr.fidx, 2).astype(jnp.float32),
+        jnp.tile(arr.client, 2).astype(jnp.float32),
+        d_hop,
+        jnp.tile(frack, 2).astype(jnp.float32),
+    ], axis=1)
+    arr = arr._replace(pair=pair)
+    state = state._replace(switch=switch, metrics=m)
+    lanes = Lanes(dst=d_dst, act=d_act, clo=d_clo, payload=payload)
+    return state, arr, Routed(req_id=req_id, cloned=cloned, frack=frack), lanes
+
+
+def stage_coordinator(cfg: FleetConfig, params, state: FleetState,
+                      arr: Arrivals, routed: Routed, lanes: Lanes):
+    """LÆDGE coordinator node (compiled out unless ``cfg.coordinator``).
+
+    Arrival lanes of coordinator policies are parked in the ring instead of
+    dispatched; the drain then pops FCFS entries onto servers chosen by the
+    policy's registered rule, spending one CPU credit per transmitted copy.
+    Dispatches join the delivery lanes; the coordinator's ``outstanding``
+    view is decremented by the response stage."""
+    if not cfg.coordinator:
+        return state, lanes
+    RK, S, W = cfg.n_racks, cfg.n_servers, cfg.n_workers
+    ST = RK * S
+    A = cfg.max_arrivals
+    CQ = cfg.coordinator_cap
+    CD = cfg.drain_per_tick
+    cpu = jnp.float32(cfg.coord_cpu_us)
+    dt = jnp.float32(cfg.dt_us)
+    credit_cap = jnp.float32(CD)
+
+    m = state.metrics
+    coord = state.coord
+    is_coord = id_mask(params.policy_id, registry.coordinator_ids())
+
+    # coordinator lanes never dispatch directly (is_coord is a traced
+    # scalar: under vmap each sweep row takes its own value)
+    lanes = lanes._replace(act=lanes.act & ~is_coord)
+
+    # -- park this tick's arrivals in the ring -----------------------------
+    enq = arr.active & is_coord
+    rank = _rank(enq)
+    ok = enq & (coord.count + rank < CQ)
+    slot = (coord.head + coord.count + rank) % CQ
+    rows = jnp.stack([                               # (A, QF)
+        arr.base,
+        jnp.full(A, arr.t_us),
+        routed.req_id.astype(jnp.float32),
+        jnp.full(A, float(CLO_ORIG), jnp.float32),
+        arr.fidx.astype(jnp.float32),
+        arr.client.astype(jnp.float32),
+        jnp.zeros(A, jnp.float32),
+        jnp.full(A, float(RK), jnp.float32),  # pairs filter at the top tier
+    ], axis=1)
+    data = coord.data.at[jnp.where(ok, slot, CQ)].set(rows, mode="drop")
+    count = coord.count + ok.sum()
+    m = m._replace(n_coord_queued=m.n_coord_queued + ok.sum(),
+                   n_coord_overflow=m.n_coord_overflow + (enq & ~ok).sum())
+
+    # -- drain: FCFS pops onto idle servers, CPU-credit throttled ----------
+    credit = jnp.minimum(coord.credit + dt / cpu, credit_cap)
+    u = jax.random.uniform(arr.k_stage, (CD, 2))
+    branches = registry.coordinator_branches()
+
+    def pop(carry, u_j):
+        outstanding, head, cnt, cred, spent = carry
+        idle = outstanding < W
+        n_idle = idle.sum()
+        s1, s2, want_clone = jax.lax.switch(
+            params.policy_id, branches, idle, n_idle, u_j[0], u_j[1])
+        # a backed-up CPU degrades to single-copy dispatch before it
+        # stalls — the same negative feedback the DES coordinator gets
+        # from its pipe-inflated outstanding counts
+        clone_want = want_clone & (cred >= 2.0)
+        cost = 1.0 + clone_want.astype(jnp.float32)
+        can = (cnt > 0) & (n_idle >= 1) & (cred >= cost) & is_coord
+        do_clone = can & clone_want
+        outstanding = outstanding.at[jnp.where(can, s1, ST)].add(
+            1, mode="drop")
+        outstanding = outstanding.at[jnp.where(do_clone, s2, ST)].add(
+            1, mode="drop")
+        row = data[head]
+        # CPU serialization inside the tick: the j-th transmitted copy
+        # waits for the copies before it
+        hop1 = (spent + 1.0) * cpu
+        hop2 = (spent + cost) * cpu
+        head = jnp.where(can, (head + 1) % CQ, head)
+        cnt = cnt - can.astype(jnp.int32)
+        spent = spent + jnp.where(can, cost, 0.0)
+        cred = cred - jnp.where(can, cost, 0.0)
+        return ((outstanding, head, cnt, cred, spent),
+                (can, do_clone, s1, s2, row, hop1, hop2))
+
+    (outstanding, head, count, credit, _spent), out = jax.lax.scan(
+        pop, (coord.outstanding, coord.head, count, credit,
+              jnp.float32(0.0)), u)
+    can, do_clone, s1, s2, row, hop1, hop2 = out
+    m = m._replace(n_cloned=m.n_cloned + do_clone.sum())
+
+    pay1 = row.at[:, QF_HOP].set(jnp.where(can, hop1, 0.0))
+    pay2 = row.at[:, QF_HOP].set(jnp.where(do_clone, hop2, 0.0))
+    clo = jnp.full(CD, CLO_ORIG, jnp.int32)  # ordinary copies: never
+    lanes = lanes.extend(s1, can, clo, pay1)  # server-dropped, filter-paired
+    lanes = lanes.extend(s2, do_clone, clo, pay2)
+
+    state = state._replace(
+        metrics=m,
+        coord=coord._replace(outstanding=outstanding, head=head,
+                             count=count, data=data, credit=credit))
+    return state, lanes
+
+
+def wheel_arm(wheel: HedgeWheel, tick, delay_ticks: int, arm_mask,
+              entries):
+    """Arm ``entries`` (rows of ``WH`` fields, one per True in
+    ``arm_mask``) to fire ``delay_ticks`` from ``tick``.
+
+    Returns ``(wheel, armed_mask, dropped_mask)``: lanes beyond the slot's
+    free width are dropped *deterministically* — the latest lanes lose, and
+    a lane is never dropped while the slot has room (property-tested in
+    ``tests/test_fleetsim_stages.py``)."""
+    n_slots, width, _ = wheel.data.shape
+    slot = (tick + delay_ticks) % n_slots
+    pos = wheel.count[slot] + _rank(arm_mask)
+    ok = arm_mask & (pos < width)
+    data = wheel.data.at[slot, jnp.where(ok, pos, width)].set(
+        entries, mode="drop")
+    count = wheel.count.at[slot].add(ok.sum())
+    return HedgeWheel(count=count, data=data), ok, arm_mask & ~ok
+
+
+def wheel_fire(wheel: HedgeWheel, tick):
+    """Pop every entry due at ``tick`` (the wheel is deeper than the delay
+    horizon, so everything in the slot is due).  Returns ``(wheel,
+    due_mask, entries)`` with the slot cleared."""
+    n_slots, width, _ = wheel.data.shape
+    slot = tick % n_slots
+    due = jnp.arange(width) < wheel.count[slot]
+    entries = wheel.data[slot]
+    return wheel._replace(count=wheel.count.at[slot].set(0)), due, entries
+
+
+def stage_hedge_timer(cfg: FleetConfig, params, state: FleetState,
+                      arr: Arrivals, routed: Routed, lanes: Lanes):
+    """Delayed hedging (compiled out unless ``cfg.hedge_timer``).
+
+    Fires this tick's due duplicates as CLO=2 delivery lanes — unless the
+    original's response already parked its fingerprint at the lane's filter
+    switch, which is the array form of the DES's cancel-on-first-response —
+    then arms a wheel entry for every hedge-policy arrival."""
+    if not cfg.hedge_timer:
+        return state, lanes
+    T = cfg.n_filter_tables
+    A = cfg.max_arrivals
+    m = state.metrics
+    is_hedge = id_mask(params.policy_id, registry.hedge_timer_ids())
+
+    # -- fire due entries --------------------------------------------------
+    wheel, due, entries = wheel_fire(state.wheel, arr.tick)
+    rid = entries[:, WHEEL_RID].astype(jnp.int32)
+    fidx = entries[:, WHEEL_IDX].astype(jnp.int32)
+    frack = entries[:, WHEEL_FRACK].astype(jnp.int32)
+    slot_f = fingerprint_hash_jax(rid, cfg.n_filter_slots)
+    parked = arr.tables[frack * T + fidx, slot_f] == rid
+    fire = due & ~parked & ~arr.down     # a dark fabric loses the hedge
+    cancelled = due & ~fire
+    HW = fire.shape[0]
+    pay = jnp.stack([                                # (HW, QF)
+        entries[:, WHEEL_BASE],
+        entries[:, WHEEL_TARR],         # latency runs from the ORIGINAL
+        entries[:, WHEEL_RID],          # arrival, so the hedge pays the
+        jnp.full(HW, float(CLO_CLONE), jnp.float32),  # delay floor
+        entries[:, WHEEL_IDX],
+        entries[:, WHEEL_CLIENT],
+        jnp.zeros(HW, jnp.float32),
+        entries[:, WHEEL_FRACK],
+    ], axis=1)
+    lanes = lanes.extend(entries[:, WHEEL_DST].astype(jnp.int32), fire,
+                         jnp.full(HW, CLO_CLONE, jnp.int32), pay)
+    m = m._replace(n_cloned=m.n_cloned + fire.sum(),
+                   n_hedges_cancelled=m.n_hedges_cancelled
+                   + cancelled.sum())
+
+    # -- arm this tick's arrivals ------------------------------------------
+    dst2 = jax.lax.switch(params.policy_id, registry.hedge_timer_branches(),
+                          arr.pair, arr.r1, arr.r2)
+    rows = jnp.stack([                               # (A, WH)
+        routed.req_id.astype(jnp.float32),
+        dst2.astype(jnp.float32),
+        arr.fidx.astype(jnp.float32),
+        arr.client.astype(jnp.float32),
+        arr.base,
+        jnp.full(A, arr.t_us),
+        routed.frack.astype(jnp.float32),
+    ], axis=1)
+    assert rows.shape[1] == WH
+    wheel, armed, dropped = wheel_arm(wheel, arr.tick,
+                                      cfg.hedge_delay_ticks,
+                                      arr.active & is_hedge, rows)
+    m = m._replace(n_hedges_armed=m.n_hedges_armed + armed.sum(),
+                   n_wheel_dropped=m.n_wheel_dropped + dropped.sum())
+    return state._replace(metrics=m, wheel=wheel), lanes
+
+
+def stage_server(cfg: FleetConfig, params, state: FleetState,
+                 arr: Arrivals, lanes: Lanes):
+    """Workers advance, server-side CLO=2 drop rule, FCFS ring enqueue, and
+    dequeue of the oldest queued jobs onto the freed workers (execution
+    times drawn here: intrinsic base × per-execution noise × straggler
+    slowdown + jitter spikes)."""
+    RK, S, W, Q = cfg.n_racks, cfg.n_servers, cfg.n_workers, cfg.queue_cap
+    ST = RK * S
+    D = lanes.dst.shape[0]
+    dt = jnp.float32(cfg.dt_us)
+    srv_ids = jnp.arange(ST)
+    m = state.metrics
+    d_dst, d_act, d_clo = lanes.dst, lanes.act, lanes.clo
+
+    # -- workers advance, completions (busy ⇔ REM > 0) ---------------
+    meta = state.workers.meta.reshape(ST, W, WF)
+    was_busy = meta[:, :, WF_REM] > 0
+    rem = jnp.where(was_busy, meta[:, :, WF_REM] - dt, 0.0)
+    done = was_busy & (rem <= 0)                     # (ST, W)
+    busy_after = was_busy & ~done
+    n_free = (~busy_after).sum(axis=1)               # (ST,)
+    rq = state.queues
+    q_head = rq.head.reshape(ST)
+    n_queued = rq.count.reshape(ST)
+
+    # -- CLO=2 drop rule --------------------------------------------
+    # A clone is dropped iff the server's *wait queue* is non-empty when
+    # it arrives.  This tick's completions drain min(n_free, n_queued)
+    # jobs first; earlier arrival lanes to the same server then occupy
+    # the leftover free workers before queuing.  Two passes resolve the
+    # (rare) dependence of one clone's fate on an earlier clone's.
+    q_left = jnp.maximum(n_queued - n_free, 0)       # still waiting
+    free_left = jnp.maximum(n_free - n_queued, 0)    # still free
+    onehot = (d_dst[None, :] == srv_ids[:, None])    # (ST, D)
+    is_clone = d_clo == CLO_CLONE
+    n_earlier = _rank_among_earlier(onehot & (d_act & ~is_clone)[None, :])
+    occupied = (q_left[d_dst] > 0) | \
+        (jnp.take_along_axis(n_earlier, d_dst[None, :], axis=0)[0]
+         > free_left[d_dst])
+    drop0 = is_clone & d_act & occupied
+    keep0 = d_act & ~drop0
+    n_earlier1 = _rank_among_earlier(onehot & keep0[None, :])
+    occupied1 = (q_left[d_dst] > 0) | \
+        (jnp.take_along_axis(n_earlier1, d_dst[None, :], axis=0)[0]
+         > free_left[d_dst])
+    clone_drop = is_clone & d_act & occupied1
+    d_keep = d_act & ~clone_drop
+    m = m._replace(n_clone_drops=m.n_clone_drops + clone_drop.sum())
+
+    # -- enqueue into the FCFS rings ---------------------------------
+    # the r-th kept lane for a server lands r slots past its tail
+    lane_m = onehot & d_keep[None, :]                # (ST, D)
+    lane_rank = _rank_among_earlier(lane_m)          # (ST, D)
+    rank_own = jnp.take_along_axis(lane_rank, d_dst[None, :], axis=0)[0]
+    ovf = d_keep & (n_queued[d_dst] + rank_own >= Q)
+    m = m._replace(n_overflow=m.n_overflow + ovf.sum())
+    enq_ok = d_keep & ~ovf
+    slot = (q_head[d_dst] + n_queued[d_dst] + rank_own) % Q
+    flat_q = rq.data.reshape(ST * Q, QF)
+    qrow = jnp.where(enq_ok, d_dst * Q + slot, jnp.int32(ST * Q))
+    flat_q = flat_q.at[qrow].set(lanes.payload, mode="drop")
+    count1 = n_queued + (onehot & enq_ok[None, :]).sum(axis=1)
+
+    # -- dequeue: ring head onto free workers ------------------------
+    R = min(W, Q)
+    n_start = jnp.minimum(count1, n_free)            # (ST,)
+    r = jnp.arange(R)
+    startm = r[None, :] < n_start[:, None]           # (ST, R)
+    deq_slot = (q_head[:, None] + r[None, :]) % Q    # (ST, R)
+    job = flat_q[srv_ids[:, None] * Q + deq_slot]    # (ST, R, QF)
+    # r-th free worker of each server, via rank matching (no sort)
+    wfree = ~busy_after
+    wrank = _rank_among_earlier(wfree)               # (ST, W)
+    sel = (wfree[:, None, :]
+           & (wrank[:, None, :] == r[None, :, None]))  # (ST, R, W)
+    wcol = jnp.einsum("srw,w->sr", sel.astype(jnp.int32), jnp.arange(W))
+    start_base = job[:, :, QF_BASE]
+    exec_dur = _execute(cfg, arr.k_exec, start_base) \
+        * params.slowdown[:, None]
+    wrow = jnp.where(startm, srv_ids[:, None] * W + wcol,
+                     jnp.int32(ST * W))
+    # responses are read from the PRE-overwrite worker metadata
+    meta_flat = jnp.concatenate(
+        [jnp.where(busy_after, rem, 0.0)[:, :, None],
+         meta[:, :, 1:]], axis=2).reshape(ST * W, WF)
+    new_meta = jnp.stack([
+        exec_dur + cfg.server_overhead_us,
+        job[:, :, QF_TARR], job[:, :, QF_RID], job[:, :, QF_CLO],
+        job[:, :, QF_IDX], job[:, :, QF_CLIENT],
+        job[:, :, QF_HOP], job[:, :, QF_FRACK]], axis=2)   # (ST, R, WF)
+    worker_meta = meta_flat.at[wrow.reshape(-1)].set(
+        new_meta.reshape(-1, WF), mode="drop").reshape(ST, W, WF)
+    q_count = count1 - n_start
+    queues = rq._replace(head=((q_head + n_start) % Q).reshape(RK, S),
+                         count=q_count.reshape(RK, S),
+                         data=flat_q.reshape(RK, S, Q, QF))
+
+    # -- compact completions into the response lanes -----------------
+    K = min(cfg.max_responses, ST * W)
+    done_flat = done.reshape(-1)                     # (ST·W,)
+    m = m._replace(
+        n_resp=m.n_resp + done_flat.sum(),
+        n_resp_empty=m.n_resp_empty
+        + (done_flat & (jnp.repeat(q_count, W) == 0)).sum(),
+        lost_down_resp=m.lost_down_resp
+        + jnp.where(arr.down, done_flat.sum(), 0))
+    rrank = jnp.cumsum(done_flat) - done_flat.astype(jnp.int32)
+    clipped = done_flat & (rrank >= K)
+    m = m._replace(n_resp_clipped=m.n_resp_clipped + clipped.sum())
+    krow = jnp.where(done_flat & ~clipped, rrank, jnp.int32(K))
+    resp_payload = jnp.concatenate([                 # (ST·W, WF + 2)
+        meta_flat,
+        jnp.repeat(srv_ids, W).astype(jnp.float32)[:, None],
+        jnp.repeat(q_count, W).astype(jnp.float32)[:, None]], axis=1)
+    resp = jnp.zeros((K, WF + 2), jnp.float32).at[krow].set(
+        resp_payload, mode="drop")
+    n_done = jnp.minimum(done_flat.sum(), K)
+    resp_active = (jnp.arange(K) < n_done) & ~arr.down
+
+    state = state._replace(
+        queues=queues,
+        workers=state.workers._replace(meta=worker_meta.reshape(RK, S, W,
+                                                                WF)),
+        metrics=m)
+    return state, Responses(
+        active=resp_active,
+        rid=resp[:, WF_RID].astype(jnp.int32),
+        clo=resp[:, WF_CLO].astype(jnp.int32),
+        idx=resp[:, WF_IDX].astype(jnp.int32),
+        client=resp[:, WF_CLIENT].astype(jnp.int32),
+        tarr=resp[:, WF_TARR],
+        hop=resp[:, WF_HOP],
+        frack=resp[:, WF_FRACK].astype(jnp.int32),
+        sid=resp[:, WF].astype(jnp.int32),
+        qlen=resp[:, WF + 1].astype(jnp.int32))
+
+
+def stage_response_filter(cfg: FleetConfig, params, state: FleetState,
+                          arr: Arrivals, resp: Responses):
+    """Switch response path: per-rack StateT update + the fingerprint
+    filter at each pair's filter switch (one flattened-table call for the
+    whole fabric), plus the coordinator's response-side bookkeeping."""
+    RK, S = cfg.n_racks, cfg.n_servers
+    T = cfg.n_filter_tables
+    m = state.metrics
+    # each response updates its own rack switch's StateT and runs the
+    # fingerprint filter at the pair's filter switch; flattening the
+    # (rack | spine) × table axes lets one call serve the whole fabric
+    idx_flat = resp.frack * T + resp.idx
+    sstate, tables, drop = _filter_responses(
+        cfg, arr.sstate, arr.tables, resp.rid, idx_flat, resp.clo, resp.sid,
+        resp.qlen, resp.active)
+    switch = state.switch._replace(
+        server_state=sstate.reshape(RK, S),
+        filter_tables=tables.reshape(RK + 1, T, cfg.n_filter_slots))
+    m = m._replace(
+        n_filtered=m.n_filtered + (drop & resp.active).sum(),
+        n_spine_filtered=m.n_spine_filtered
+        + (drop & resp.active & (resp.frack == RK)).sum())
+    state = state._replace(switch=switch, metrics=m)
+
+    if cfg.coordinator:
+        # every response of a coordinator policy passes back through the
+        # coordinator CPU: it costs a credit and frees an outstanding slot
+        # (the idleness signal the next tick's drain reads)
+        coord = state.coord
+        is_coord = id_mask(params.policy_id, registry.coordinator_ids())
+        dec = resp.active & is_coord
+        ST = RK * S
+        outstanding = coord.outstanding.at[
+            jnp.where(dec, resp.sid, ST)].add(-1, mode="drop")
+        credit = coord.credit - dec.sum().astype(jnp.float32)
+        state = state._replace(coord=coord._replace(
+            outstanding=outstanding,
+            credit=jnp.maximum(credit, -jnp.float32(cfg.drain_per_tick))))
+    return state, drop
+
+
+def stage_client(cfg: FleetConfig, params, state: FleetState,
+                 arr: Arrivals, resp: Responses, drop, const_lat):
+    """Client receiver threads: dedup of redundant copies, FCFS backlog
+    with per-response RX cost, latency recording into the per-rack
+    log-spaced histograms."""
+    RK, S, C = cfg.n_racks, cfg.n_servers, cfg.n_clients
+    dt = jnp.float32(cfg.dt_us)
+    t0_us = jnp.float32(cfg.warmup_us)
+    t1_us = jnp.float32(cfg.duration_us)
+    log_g = float(np.log(cfg.hist_growth))
+    m = state.metrics
+
+    deliver = resp.active & ~drop
+    dedup, redundant, evicted = dedup_tick(state.dedup, resp.rid, deliver)
+    first = deliver & ~redundant
+    m = m._replace(n_redundant=m.n_redundant + redundant.sum(),
+                   n_dedup_evicted=m.n_dedup_evicted + evicted,
+                   n_completed=m.n_completed + first.sum())
+    # receiver threads: FCFS backlog with per-response RX cost
+    cli_onehot = (resp.client[None, :] == jnp.arange(C)[:, None]) \
+        & deliver[None, :]                           # (C, K)
+    pos = jnp.take_along_axis(_rank_among_earlier(cli_onehot),
+                              resp.client[None, :], axis=0)[0]
+    backlog_pre = jnp.maximum(state.client_backlog - dt, 0.0)
+    wait = backlog_pre[resp.client] + (pos + 1) * cfg.client_rx_us
+    backlog = backlog_pre + cli_onehot.sum(axis=1) * cfg.client_rx_us
+    t_fin = arr.t_us + wait
+    if cfg.coordinator:
+        # coordinator responses serialize through its CPU before reaching
+        # the client (same rank model as the receiver threads)
+        is_coord = id_mask(params.policy_id, registry.coordinator_ids())
+        crank = _rank(deliver)
+        t_fin = t_fin + jnp.where(is_coord & deliver,
+                                  (crank + 1.0) * cfg.coord_cpu_us, 0.0)
+    lat = t_fin - resp.tarr + const_lat + resp.hop
+    rec = first & (t_fin >= t0_us) & (t_fin <= t1_us)
+    bins = jnp.clip((jnp.log(jnp.maximum(lat, cfg.hist_lo_us)
+                             / cfg.hist_lo_us) / log_g),
+                    0, cfg.hist_bins - 1).astype(jnp.int32)
+    bins = jnp.where(rec, bins, cfg.hist_bins)
+    # per-rack histograms, binned by the rack that served the winning
+    # response (non-recorded lanes scatter out of bounds and drop)
+    m = m._replace(hist=m.hist.at[resp.sid // S, bins].add(1, mode="drop"),
+                   n_completed_win=m.n_completed_win + rec.sum())
+    return state._replace(dedup=dedup, client_backlog=backlog, metrics=m)
+
+
+def _filter_responses(cfg, server_state, tables, rid, idx, clo, sid, qlen,
+                      active):
+    """Response path over the flattened fabric: StateT/ShadowT update + the
+    fingerprint filter, with the backend chosen at compile time.
+
+    ``server_state`` is the flat ``(n_racks·S,)`` tracked view, ``tables``
+    the flat ``((n_racks+1)·n_tables, n_slots)`` stack of every rack's
+    filter group plus the spine's, and ``idx`` pre-offset into it — so a
+    lane's (req_id, idx) group is unique per filter switch and the one-call
+    semantics match per-switch sequential filtering exactly.
+    """
+    if cfg.filter_backend == "vectorized":
+        st = SwitchState(seq=jnp.zeros((), jnp.int32),
+                         server_state=server_state, filter_tables=tables)
+        new_st, res = filter_tick_vectorized(st, rid, idx, clo, sid, qlen,
+                                             active)
+        return new_st.server_state, new_st.filter_tables, res.drop
+    # scan / pallas: update server state via a masked scatter, then run the
+    # table update with inactive lanes neutralised (CLO=0 never touches it)
+    sid_m = jnp.where(active, sid, jnp.int32(server_state.shape[0]))
+    server_state = server_state.at[sid_m].set(
+        qlen.astype(jnp.int32), mode="drop")
+    clo_m = jnp.where(active, clo, 0).astype(jnp.int32)
+    if cfg.filter_backend == "scan":
+        tables, drop = jax.lax.scan(
+            _filter_step, tables,
+            (rid.astype(jnp.int32), idx.astype(jnp.int32), clo_m))
+    else:  # pallas — the VMEM-resident fingerprint kernel
+        from repro.kernels.ops import fingerprint_filter
+
+        tables, drop = fingerprint_filter(
+            tables, rid.astype(jnp.int32), idx.astype(jnp.int32), clo_m)
+    return server_state, tables, drop
+
+
+# ---------------------------------------------------------------- pipeline --
+def build_step(cfg: FleetConfig, params, group_pairs: jax.Array):
+    """Compose the stages into the tick function ``lax.scan`` advances.
+
+    The composition is the whole engine: a policy that needs different
+    behaviour plugs into a stage through the registry (route branch, spine
+    placement, coordinator rule, hedge destination) instead of forking
+    this function.
+    """
+    # in-network constants added to every recorded latency (client TX + four
+    # link hops + two pipeline passes + the spine tier's round trip when the
+    # fabric has one; client-duplicating policies — C-Clone and any custom
+    # registration flagged client_dup — pay the doubled sender cost)
+    const_lat = (cfg.client_tx_us + 4 * cfg.link_us + 2 * cfg.pipeline_pass_us
+                 + cfg.spine_extra_us
+                 + jnp.where(id_mask(params.policy_id,
+                                     registry.client_dup_ids()),
+                             cfg.client_tx_us, 0.0))
+    if cfg.coordinator:
+        # coordinator policies detour switch → coordinator → switch: one
+        # extra link hop each way plus the request-processing CPU pass
+        # (the dispatch and response CPU passes are charged by the rank
+        # model inside the stages, where their serialization is visible)
+        const_lat = const_lat + jnp.where(
+            id_mask(params.policy_id, registry.coordinator_ids()),
+            2.0 * cfg.link_us + cfg.coord_cpu_us, 0.0)
+    xhop = jnp.float32(cfg.interrack_extra_us)
+
+    def step(state: FleetState, xs):
+        state, arr = stage_arrival(cfg, params, state, xs)
+        state, arr, routed, lanes = stage_route(cfg, params, state, arr,
+                                                group_pairs, xhop)
+        state, lanes = stage_coordinator(cfg, params, state, arr, routed,
+                                         lanes)
+        state, lanes = stage_hedge_timer(cfg, params, state, arr, routed,
+                                         lanes)
+        state, resp = stage_server(cfg, params, state, arr, lanes)
+        state, drop = stage_response_filter(cfg, params, state, arr, resp)
+        state = stage_client(cfg, params, state, arr, resp, drop, const_lat)
+        return state, None
+
+    return step

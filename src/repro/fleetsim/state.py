@@ -58,6 +58,16 @@ WF_FRACK = 7
 WF = 8
 
 
+WHEEL_RID = 0    # timer-wheel entry fields, (n_slots, width, WH) — float32
+WHEEL_DST = 1    # deferred duplicate's destination (fabric-global)
+WHEEL_IDX = 2    # filter-table index
+WHEEL_CLIENT = 3
+WHEEL_BASE = 4   # intrinsic demand shared with the original
+WHEEL_TARR = 5   # the ORIGINAL arrival time — the hedge pays the delay
+WHEEL_FRACK = 6  # filter location (home rack)
+WH = 7
+
+
 class FabricSwitch(NamedTuple):
     """All switch soft state of the 2-tier fabric (wiped on failure, §3.6).
 
@@ -88,6 +98,43 @@ class Workers(NamedTuple):
     meta: jax.Array     # (n_racks, S, W, WF) float32 payload; busy ⇔ REM > 0
 
 
+class CoordState(NamedTuple):
+    """Array-form coordinator node (LÆDGE, §2.2) — a CPU queue hanging off
+    the top switch.
+
+    Pending requests wait in a ring buffer of ``QF``-format rows; each tick
+    the drain pops up to ``FleetConfig.drain_per_tick`` of them onto servers
+    chosen by the policy's registered ``coordinator`` rule, spending one
+    CPU *credit* per transmitted copy (credits accrue at
+    ``dt / coord_cpu_us`` per tick, go negative when responses flood the
+    CPU, and gate dispatch — reproducing the DES coordinator's serialized
+    CPU bottleneck).  ``outstanding`` is the coordinator's own
+    dispatched-minus-responded view per server, the idleness signal of the
+    LÆDGE rule (idle ⇔ outstanding < n_workers).
+    """
+
+    outstanding: jax.Array  # (n_racks · S,) int32
+    head: jax.Array         # () int32 — oldest occupied ring slot
+    count: jax.Array        # () int32 — pending requests
+    data: jax.Array         # (coordinator_cap, QF) float32 payload rows
+    credit: jax.Array       # () float32 — CPU packet budget
+
+
+class HedgeWheel(NamedTuple):
+    """Fixed-depth timer wheel firing delayed hedge duplicates.
+
+    An entry armed at tick ``t`` lands in slot ``(t + delay) % n_slots``
+    and fires when the tick counter reaches that slot again — exactly
+    ``delay`` ticks later, because the wheel is deeper than the delay
+    horizon (enforced by ``FleetConfig``).  Per-slot occupancy beyond
+    ``wheel_width`` drops the *latest* lanes deterministically (counted in
+    ``Metrics.n_wheel_dropped``).
+    """
+
+    count: jax.Array    # (n_slots,) int32 — armed entries per slot
+    data: jax.Array     # (n_slots, width, WH) float32 entries
+
+
 class Metrics(NamedTuple):
     """Running counters + the per-rack log-spaced latency histograms."""
 
@@ -109,6 +156,15 @@ class Metrics(NamedTuple):
     n_resp: jax.Array           # all server completions
     n_resp_empty: jax.Array     # … that piggybacked qlen == 0
     lost_down_resp: jax.Array   # responses lost while the fabric was dark
+    # staged-pipeline counters (always present; only the coordinator /
+    # hedge_timer stages ever move them off zero)
+    n_coord_queued: jax.Array   # requests parked at the coordinator node
+    n_coord_overflow: jax.Array  # … lost to coordinator-ring exhaustion
+    n_hedges_armed: jax.Array   # timer-wheel entries armed
+    # … cancelled by an earlier response, or lost with a dark fabric (the
+    # DES likewise silently drops a hedge firing into a down switch)
+    n_hedges_cancelled: jax.Array
+    n_wheel_dropped: jax.Array  # … lost to wheel-slot exhaustion
 
 
 class FleetState(NamedTuple):
@@ -119,6 +175,11 @@ class FleetState(NamedTuple):
     client_backlog: jax.Array   # (C,) f32 — receiver-thread work backlog (µs)
     key: jax.Array              # PRNG carry
     metrics: Metrics
+    # optional stage sub-states: None unless the matching FleetConfig flag
+    # compiled the stage in (None is an empty pytree leaf-set, so flag-off
+    # programs carry exactly the state they always did)
+    coord: CoordState | None = None
+    wheel: HedgeWheel | None = None
 
 
 def init_fabric_switch(cfg: FleetConfig) -> FabricSwitch:
@@ -141,7 +202,26 @@ def init_metrics(cfg: FleetConfig) -> Metrics:
                    n_overflow=z, n_dedup_evicted=z, n_resp_clipped=z,
                    n_completed=z,
                    n_completed_win=z, n_resp=z, n_resp_empty=z,
-                   lost_down_resp=z)
+                   lost_down_resp=z,
+                   n_coord_queued=z, n_coord_overflow=z,
+                   n_hedges_armed=z, n_hedges_cancelled=z, n_wheel_dropped=z)
+
+
+def init_coord_state(cfg: FleetConfig) -> CoordState:
+    return CoordState(
+        outstanding=jnp.zeros((cfg.n_servers_total,), jnp.int32),
+        head=jnp.zeros((), jnp.int32),
+        count=jnp.zeros((), jnp.int32),
+        data=jnp.zeros((cfg.coordinator_cap, QF), jnp.float32),
+        credit=jnp.zeros((), jnp.float32),
+    )
+
+
+def init_hedge_wheel(cfg: FleetConfig) -> HedgeWheel:
+    return HedgeWheel(
+        count=jnp.zeros((cfg.wheel_slots,), jnp.int32),
+        data=jnp.zeros((cfg.wheel_slots, cfg.wheel_width, WH), jnp.float32),
+    )
 
 
 def init_fleet_state(cfg: FleetConfig, key: jax.Array) -> FleetState:
@@ -156,4 +236,6 @@ def init_fleet_state(cfg: FleetConfig, key: jax.Array) -> FleetState:
         client_backlog=jnp.zeros((cfg.n_clients,), jnp.float32),
         key=key,
         metrics=init_metrics(cfg),
+        coord=init_coord_state(cfg) if cfg.coordinator else None,
+        wheel=init_hedge_wheel(cfg) if cfg.hedge_timer else None,
     )

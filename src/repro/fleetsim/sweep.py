@@ -112,6 +112,9 @@ def sweep_grid(
     for p in policies:
         if p not in POLICY_IDS:
             raise ValueError(f"unknown policy {p!r}; have {list(POLICY_IDS)}")
+    # compile in the optional pipeline stages the policy set needs (a set
+    # needing neither leaves cfg — and its compiled program — untouched)
+    cfg = cfg.with_policy_stages(policies)
 
     rates = {ld: load_to_rate(ld, spec, cfg.n_servers_total, cfg.n_workers)
              for ld in loads}

@@ -46,6 +46,34 @@ SATURATION_THR = 0.90
 #: random walk whose latency grows with run length in both engines
 UTIL_CRITICAL = 0.95
 
+#: coordinator CPU per packet (µs) for the CPU-criticality estimate.  Both
+#: engines are pinned to this value on every validator path: a Scenario
+#: carries neither a NetworkCosts nor a coord_cpu_us knob, so its DES and
+#: FleetSim runs use their identical defaults (NetworkCosts.coord_cpu ==
+#: FleetConfig.coord_cpu_us == 1.5).  If that knob ever becomes
+#: scenario-settable, thread it through _check_from instead of this pin.
+COORD_CPU_US = 1.5
+#: CPU packets per fully-cloned coordinator request: request processing +
+#: clone TX + two response passes
+COORD_PACKETS_PER_CLONE = 4.0
+
+# Coordinator-policy (LÆDGE) modelling notes feeding the tolerances above:
+# the coordinator CPU (≈1.5 µs per packet, 4 packets per cloned request)
+# saturates far below server capacity.  Once the *full-cloning* CPU demand
+# (rate × 4 × coord_cpu) crosses UTIL_CRITICAL the coordinator enters a
+# clone-throttling regime with no clean steady state: the DES oscillates
+# between cloning (idle servers visible) and not (its outstanding counts
+# are inflated by the CPU pipe's standing backlog), while FleetSim's
+# credit model degrades smoothly to single-copy dispatch — so such points
+# are classified *saturated* and, like every saturated point, checked only
+# for agreement on the collapse itself.  Past genuine collapse the
+# clone/filter fractions are run-length artifacts in both engines (the DES
+# drains its whole backlog after the arrival window; FleetSim counts a
+# fixed tick window), hence `clone_ok`/`filter_ok` are, like the latency
+# checks, only enforced on stationary points.  FleetSim-side collapse
+# shows up as goodput loss, server-queue overflow, or coordinator-ring
+# overflow (all three accepted as the collapse signature).
+
 
 @dataclass
 class CrossCheck:
@@ -63,6 +91,7 @@ class CrossCheck:
     fleet_goodput: float
     fleet_overflow_frac: float  # queue-overflow drops / arrivals
     effective_util: float  # offered load × served copies per request
+    coord_cpu_demand: float = 0.0  # full-cloning coordinator CPU demand
 
     def _rel(self, a, b):
         return abs(a - b) / max(abs(a), abs(b), 1e-9)
@@ -70,7 +99,8 @@ class CrossCheck:
     @property
     def saturated(self) -> bool:
         return (self.des_goodput < SATURATION_THR
-                or self.effective_util >= UTIL_CRITICAL)
+                or self.effective_util >= UTIL_CRITICAL
+                or self.coord_cpu_demand >= UTIL_CRITICAL)
 
     @property
     def p50_ok(self) -> bool:
@@ -84,12 +114,14 @@ class CrossCheck:
 
     @property
     def clone_ok(self) -> bool:
-        return abs(self.des_clone_frac - self.fleet_clone_frac) \
+        return self.saturated or \
+            abs(self.des_clone_frac - self.fleet_clone_frac) \
             <= CLONE_FRAC_ATOL
 
     @property
     def filter_ok(self) -> bool:
-        return abs(self.des_filter_frac - self.fleet_filter_frac) \
+        return self.saturated or \
+            abs(self.des_filter_frac - self.fleet_filter_frac) \
             <= FILTER_FRAC_ATOL
 
     @property
@@ -99,7 +131,8 @@ class CrossCheck:
             # artifact in both engines (the DES excludes completions after
             # its arrival window; FleetSim's deep-but-finite rings
             # eventually shed), so require the *signature* of collapse:
-            # goodput loss or sustained overflow shedding.
+            # goodput loss or sustained overflow shedding (server queues
+            # or the coordinator ring).
             return (self.fleet_goodput < SATURATION_THR
                     or self.fleet_overflow_frac > 0.02)
         return self._rel(self.des_goodput, self.fleet_goodput) <= THR_RTOL
@@ -110,7 +143,7 @@ class CrossCheck:
                 and self.filter_ok and self.thr_ok)
 
     def describe(self) -> str:
-        sat = " [saturated: latency skipped]" if self.saturated else ""
+        sat = " [saturated: latency/clone skipped]" if self.saturated else ""
         return (f"{self.policy}@{self.load:.2f}: "
                 f"p50 {self.des_p50:.0f}/{self.fleet_p50:.0f}µs"
                 f"[{'ok' if self.p50_ok else 'FAIL'}] "
@@ -130,7 +163,16 @@ def _filter_frac(n_filtered: int, n_cloned: int) -> float:
 
 def _check_from(policy: str, load: float, des, fr: FleetResult) -> CrossCheck:
     """Assemble one CrossCheck from a DES result + a FleetResult."""
+    from repro.scenarios import registry
+
+    try:
+        is_coord = registry.needs_coordinator(policy)
+    except KeyError:
+        is_coord = False
+    coord_demand = (COORD_PACKETS_PER_CLONE * COORD_CPU_US
+                    * des.offered_rate_mrps) if is_coord else 0.0
     return CrossCheck(
+        coord_cpu_demand=coord_demand,
         policy=policy, load=load,
         des_p50=des.p50_us, fleet_p50=fr.p50_us,
         des_p99=des.p99_us, fleet_p99=fr.p99_us,
@@ -140,7 +182,8 @@ def _check_from(policy: str, load: float, des, fr: FleetResult) -> CrossCheck:
         fleet_filter_frac=_filter_frac(fr.n_filtered, fr.n_cloned),
         des_goodput=des.throughput_mrps / des.offered_rate_mrps,
         fleet_goodput=fr.throughput_mrps / fr.offered_rate_mrps,
-        fleet_overflow_frac=fr.n_overflow / max(fr.n_arrivals, 1),
+        fleet_overflow_frac=(fr.n_overflow + fr.n_coord_overflow)
+        / max(fr.n_arrivals, 1),
         effective_util=load * (1.0 + (des.n_cloned - des.n_clone_drops)
                                / des.n_requests),
     )
@@ -263,6 +306,9 @@ def main(argv: list[str] | None = None) -> int:
                          "name); 'none' skips the trace check")
     ap.add_argument("--trace-ticks", type=int, default=None,
                     help="override the trace scenario's n_ticks")
+    ap.add_argument("--out", default=None,
+                    help="write the cross-validation report (one row per "
+                         "checked point) to this JSON artifact")
     args = ap.parse_args(argv)
 
     checks = []
@@ -281,6 +327,22 @@ def main(argv: list[str] | None = None) -> int:
         n_ok += c.ok
         print(("[PASS] " if c.ok else "[FAIL] ") + c.describe())
     print(f"{n_ok}/{len(checks)} points within tolerance")
+    if args.out:
+        import dataclasses
+        import json
+        from pathlib import Path
+
+        out = Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps({
+            "grid": args.grid, "trace": args.trace,
+            "requests": args.requests,
+            "n_ok": n_ok, "n_checks": len(checks),
+            "checks": [{**dataclasses.asdict(c), "pass": bool(c.ok),
+                        "saturated": bool(c.saturated),
+                        "detail": c.describe()} for c in checks],
+        }, indent=1))
+        print(f"wrote {out}")
     return 0 if n_ok == len(checks) else 1
 
 

@@ -65,8 +65,21 @@ def _try_des(sc, args, rows) -> None:
         print(f"[skip des] {sc.name}: {e}")
 
 
+def _check_policies(names) -> None:
+    """Fail fast — one line, nonzero exit — when a scenario file names a
+    policy nothing registered, instead of a traceback from deep inside an
+    engine."""
+    registered = registry.names()
+    for n in names:
+        if n not in registered:
+            raise SystemExit(f"error: unknown policy {n!r} "
+                             f"(registered: {', '.join(registered)})")
+
+
 def run_file(args) -> list[dict]:
     obj = load_any(args.file)
+    _check_policies(obj.resolved_policies() if isinstance(obj, SweepSpec)
+                    else [obj.policy])
     overrides = {"n_ticks": args.ticks} if args.ticks else {}
     rows: list[dict] = []
     if isinstance(obj, SweepSpec):

@@ -51,6 +51,12 @@ __all__ = [
     "spine_placements",
     "spine_clone_ids",
     "client_dup_ids",
+    "coordinator_ids",
+    "hedge_timer_ids",
+    "coordinator_branches",
+    "hedge_timer_branches",
+    "needs_coordinator",
+    "needs_hedge_timer",
     "version",
 ]
 
@@ -64,16 +70,31 @@ class PolicyDef:
     """One policy, as seen by every engine.
 
     ``policy_id`` is the dense int the array engine switches on (``None``
-    for DES-only policies such as LÆDGE or hedging, which need a
-    coordinator node or per-request timers the array engine does not
-    model).  ``des`` builds the DES ``SwitchPolicy``; ``route`` is the
-    array-form branch ``(server_state, pair, r1, r2) -> (dst1, dst2,
-    cloned, clo1, clo2)``.  ``spine_clone`` marks policies whose saturated
-    lanes the spine may upgrade to inter-rack clones (§3.7), with
-    ``spine_place(rack_load, server_state, home, r1, r2, remote_cand, *,
-    n_racks, n_servers)`` overriding the default least-loaded-rack
-    placement.  ``client_dup`` marks client-side duplication (the sender
-    pays doubled TX cost, as C-Clone does).
+    for DES-only policies).  ``des`` builds the DES ``SwitchPolicy``;
+    ``route`` is the array-form branch ``(server_state, pair, r1, r2) ->
+    (dst1, dst2, cloned, clo1, clo2)``.  ``spine_clone`` marks policies
+    whose saturated lanes the spine may upgrade to inter-rack clones
+    (§3.7), with ``spine_place(rack_load, server_state, home, r1, r2,
+    remote_cand, *, n_racks, n_servers)`` overriding the default
+    least-loaded-rack placement.  ``client_dup`` marks client-side
+    duplication (the sender pays doubled TX cost, as C-Clone does).
+
+    Two optional *stage hooks* route a policy through FleetSim's staged
+    tick pipeline (``repro.fleetsim.stages``) instead of plain immediate
+    dispatch:
+
+    * ``coordinator(idle, n_idle, u1, u2) -> (s1, s2, clone)`` — the
+      policy's coordinator-node dispatch rule, called per drained queue
+      entry (LÆDGE: clone to two random idle servers iff ≥ 2 are idle).
+      Arrival lanes of such policies are *queued at the coordinator node*
+      and drained by this rule each tick, never dispatched directly.
+    * ``hedge_timer(pair, r1, r2) -> deferred_dst`` — the destination of
+      a delayed duplicate armed into the engine's timer wheel at arrival
+      and fired ``FleetConfig.hedge_delay_us`` later unless the first
+      response arrived meanwhile.
+
+    Both hooks are jax callables, so — like ``route`` itself — they are
+    attached by ``repro.fleetsim.policies`` via :func:`attach_route`.
     """
 
     name: str
@@ -83,6 +104,8 @@ class PolicyDef:
     spine_clone: bool = False
     spine_place: Callable | None = None
     client_dup: bool = False
+    coordinator: Callable | None = None
+    hedge_timer: Callable | None = None
     description: str = ""
 
 
@@ -134,6 +157,8 @@ def register(
     spine_clone: bool = False,
     spine_place: Callable | None = None,
     client_dup: bool = False,
+    coordinator: Callable | None = None,
+    hedge_timer: Callable | None = None,
     description: str = "",
 ) -> PolicyDef:
     """Register a policy under a unique name (and unique id, if array-form).
@@ -164,19 +189,23 @@ def register(
             raise ValueError("policy_id must be non-negative")
     d = PolicyDef(name=name, policy_id=policy_id, des=des, route=route,
                   spine_clone=spine_clone, spine_place=spine_place,
-                  client_dup=client_dup, description=description)
+                  client_dup=client_dup, coordinator=coordinator,
+                  hedge_timer=hedge_timer, description=description)
     _REGISTRY[name] = d
     _bump()
     return d
 
 
 def attach_route(name: str, route: Callable, *,
-                 spine_place: Callable | None = None) -> PolicyDef:
-    """Attach (or replace) the array-form branch of an existing policy.
+                 spine_place: Callable | None = None,
+                 coordinator: Callable | None = None,
+                 hedge_timer: Callable | None = None) -> PolicyDef:
+    """Attach (or replace) the array-form branches of an existing policy.
 
-    Used by ``repro.fleetsim.policies`` to add the engine branches to
-    policies whose DES side registered first; the policy must already carry
-    an id.
+    Used by ``repro.fleetsim.policies`` to add the engine branches (the
+    route, and optionally the ``coordinator`` / ``hedge_timer`` stage
+    hooks) to policies whose DES side registered first; the policy must
+    already carry an id.
     """
     _ensure_builtins()
     d = get(name)
@@ -185,7 +214,11 @@ def attach_route(name: str, route: Callable, *,
                          "with one before attaching an array branch")
     d = replace(d, route=route,
                 spine_place=spine_place if spine_place is not None
-                else d.spine_place)
+                else d.spine_place,
+                coordinator=coordinator if coordinator is not None
+                else d.coordinator,
+                hedge_timer=hedge_timer if hedge_timer is not None
+                else d.hedge_timer)
     _REGISTRY[name] = d
     _bump()
     return d
@@ -291,6 +324,59 @@ def spine_clone_ids() -> tuple[int, ...]:
 def client_dup_ids() -> tuple[int, ...]:
     """Ids whose clients transmit both copies themselves (doubled TX)."""
     return tuple(d.policy_id for d in array_policies() if d.client_dup)
+
+
+def coordinator_ids() -> tuple[int, ...]:
+    """Ids whose arrival lanes are queued at the coordinator node and
+    dispatched by their registered ``coordinator`` rule (LÆDGE-style)."""
+    _ensure_routes()
+    return tuple(d.policy_id for d in array_policies()
+                 if d.coordinator is not None)
+
+
+def hedge_timer_ids() -> tuple[int, ...]:
+    """Ids that arm a delayed duplicate into the engine's timer wheel."""
+    _ensure_routes()
+    return tuple(d.policy_id for d in array_policies()
+                 if d.hedge_timer is not None)
+
+
+def coordinator_branches() -> list[Callable]:
+    """Per-policy coordinator dispatch rules sorted by id, with a fallback
+    no-op branch for policies without one (their lanes never reach the
+    coordinator, but ``lax.switch`` needs a dense table)."""
+    _ensure_routes()
+    return [d.coordinator or _coordinator_noop for d in array_policies()]
+
+
+def hedge_timer_branches() -> list[Callable]:
+    """Per-policy deferred-duplicate destinations sorted by id (fallback:
+    the lane's second uniform candidate — inert, such lanes never arm)."""
+    _ensure_routes()
+    return [d.hedge_timer or _hedge_timer_noop for d in array_policies()]
+
+
+def _coordinator_noop(idle, n_idle, u1, u2):
+    zero = n_idle * 0
+    return zero, zero, n_idle < 0
+
+
+def _hedge_timer_noop(pair, r1, r2):
+    return r2
+
+
+def needs_coordinator(name: str) -> bool:
+    """Whether running ``name`` through FleetSim needs the coordinator
+    stage compiled in (``FleetConfig.coordinator``)."""
+    _ensure_routes()
+    return get(name).coordinator is not None
+
+
+def needs_hedge_timer(name: str) -> bool:
+    """Whether running ``name`` through FleetSim needs the timer-wheel
+    stage compiled in (``FleetConfig.hedge_timer``)."""
+    _ensure_routes()
+    return get(name).hedge_timer is not None
 
 
 def version() -> int:

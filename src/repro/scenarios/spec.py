@@ -108,6 +108,10 @@ class Scenario:
             kw["max_arrivals"] = self.max_arrivals
         kw.update(overrides)
         cfg = FleetConfig(**kw)
+        # compile in the optional pipeline stages this policy needs
+        # (coordinator / hedge_timer registry hooks); stage-less policies
+        # keep the exact config — and compiled program — they always had
+        cfg = cfg.with_policy_stages([self.policy])
         if self.max_arrivals is None and "max_arrivals" not in overrides:
             if self.arrival.kind == "trace":
                 lanes = max(4, self.arrival.max_count(cfg.n_ticks))

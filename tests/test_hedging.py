@@ -7,14 +7,25 @@ Three contract points from the Tail-at-Scale framing:
   switch vantage point exactly like NetClone's;
 * hedging is *surgical*: its clone overhead is bounded by the straggler
   fraction (requests still outstanding at the delay), unlike C-Clone's 100%.
+
+Plus the DES golden runs for the two host-timer policies (hedge, LÆDGE):
+``tests/golden/des_hedge_laedge.json`` pins their counters exactly and
+their latency statistics to float tolerance, so DES-side regressions can't
+hide behind the cross-validation tolerances.
 """
 
+import json
+from pathlib import Path
+
 import numpy as np
+import pytest
 
 from repro.core.header import CLO_CLONE, CLO_ORIG, Request, Response
 from repro.core.hedging import HedgePolicy
 from repro.core.simulator import Simulator
 from repro.core.workloads import ExponentialService
+
+DES_GOLDEN = Path(__file__).parent / "golden" / "des_hedge_laedge.json"
 
 
 # ------------------------------------------------------------- unit level ---
@@ -92,5 +103,29 @@ def test_hedge_counts_balance():
                   delay_us=75.0).run(offered_load=0.5, n_requests=6000)
     # every hedge clone either raced (filtered / redundant at client) or was
     # dropped by the server-side CLO=2 rule
+    assert r.n_filtered + r.n_clone_drops + r.n_redundant_at_client \
+        == r.n_cloned
+
+
+# ------------------------------------------------------------- DES goldens --
+def _des_golden_cases():
+    return json.loads(DES_GOLDEN.read_text())["cases"]
+
+
+@pytest.mark.parametrize("case_i", range(len(_des_golden_cases())))
+def test_des_golden_hedge_laedge(case_i):
+    """The host-timer policies replay their pinned golden runs: counters
+    exactly, latency statistics to float tolerance (the DES is a
+    deterministic numpy program given its seed)."""
+    c = _des_golden_cases()[case_i]
+    svc = ExponentialService(25.0)
+    r = Simulator(c["policy"], svc, **c["sim_kw"]).run(**c["run_kw"])
+    for field, want in c["metrics"].items():
+        assert getattr(r, field) == want, field
+    for field, want in c["stats"].items():
+        assert getattr(r, field) == pytest.approx(want, rel=1e-6), field
+    # and the accounting invariant the goldens encode: every duplicate is
+    # absorbed somewhere we can see (switch filter / coordinator / server
+    # drop / client dedup)
     assert r.n_filtered + r.n_clone_drops + r.n_redundant_at_client \
         == r.n_cloned

@@ -54,12 +54,17 @@ def _load_example(name):
 def test_builtin_ids_are_stable():
     assert dict(POLICY_IDS) == {
         "baseline": 0, "c-clone": 1, "netclone": 2, "racksched": 3,
-        "netclone+racksched": 4}
+        "netclone+racksched": 4, "laedge": 5, "hedge": 6}
     assert POLICY_NAMES[2] == "netclone"
     assert len(POLICY_NAMES) == len(POLICY_IDS)
     # DES-only policies are registered but carry no array id
-    assert registry.get("laedge").policy_id is None
-    assert "laedge" not in POLICY_IDS
+    assert registry.get("netclone-nofilter").policy_id is None
+    assert "netclone-nofilter" not in POLICY_IDS
+    # laedge / hedge are two-engine policies via their stage hooks
+    assert registry.needs_coordinator("laedge")
+    assert registry.needs_hedge_timer("hedge")
+    assert not registry.needs_coordinator("netclone")
+    assert {"laedge", "hedge"} <= set(registry.two_engine_names())
 
 
 def test_duplicate_name_and_id_raise():
@@ -115,8 +120,8 @@ def test_early_registration_collides_at_call_site():
 
 def test_remove_refuses_id_holes():
     """Teardown order cannot silently brick the dense lax.switch table."""
-    registry.register("tmp-a", policy_id=5)
-    registry.register("tmp-b", policy_id=6)
+    registry.register("tmp-a", policy_id=7)
+    registry.register("tmp-b", policy_id=8)
     try:
         with pytest.raises(ValueError, match="id hole"):
             registry.remove("tmp-a")
@@ -140,7 +145,7 @@ def test_registration_enters_both_engines_and_sweeps():
     mod = _load_example("custom_spine_policy")
     mod.register_pow2()
     try:
-        assert POLICY_IDS["netclone+pow2spine"] == 5
+        assert POLICY_IDS["netclone+pow2spine"] == 7
         assert "netclone+pow2spine" in registry.two_engine_names()
         sc = Scenario(name="pow2", policy="netclone+pow2spine", load=0.35,
                       servers=4, workers=8, n_ticks=3000)
@@ -273,8 +278,9 @@ def test_library_names_resolve():
 
     lib = scenario_library()
     assert {"golden_single_tor", "validate_grid", "trace_burst",
-            "multirack_hot"} <= set(lib)
+            "multirack_hot", "hedge_vs_netclone"} <= set(lib)
     assert isinstance(load_any("validate_grid"), SweepSpec)
+    assert isinstance(load_any("hedge_vs_netclone"), SweepSpec)
     assert isinstance(load_any("trace_burst"), Scenario)
     with pytest.raises(FileNotFoundError):
         load_any("no_such_scenario")
@@ -367,6 +373,30 @@ def test_cli_list_and_run(tmp_path, capsys):
     assert payload["rows"] and payload["rows"][0]["engine"] == "fleetsim"
     with pytest.raises(SystemExit):
         main([])                                  # file required
+
+
+def test_cli_unknown_policy_one_line_error(tmp_path, capsys):
+    """A scenario file naming an unregistered policy exits nonzero with a
+    one-line 'unknown policy' message — not a traceback from inside an
+    engine."""
+    from repro.scenarios.__main__ import main
+
+    bad = Scenario(name="bad", policy="no-such-policy").to_json()
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps(bad))
+    with pytest.raises(SystemExit) as exc:
+        main([str(p), "--ticks", "100"])
+    assert exc.value.code != 0
+    msg = str(exc.value)
+    assert "unknown policy 'no-such-policy'" in msg
+    assert "registered:" in msg and "netclone" in msg
+    # sweep files are validated the same way
+    spec = SweepSpec(base=Scenario(name="bad"),
+                     policies=("netclone", "nope")).to_json()
+    p2 = tmp_path / "bad_sweep.json"
+    p2.write_text(json.dumps(spec))
+    with pytest.raises(SystemExit, match="unknown policy 'nope'"):
+        main([str(p2), "--ticks", "100"])
 
 
 def test_cli_des_incompatible_scenarios(capsys):

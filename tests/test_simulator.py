@@ -31,6 +31,24 @@ def test_laedge_completes_all():
     assert r.n_completed == r.n_requests
 
 
+@pytest.mark.parametrize("load", [0.05, 0.4, 0.8])
+def test_laedge_accounting_consistent_under_overload(load):
+    """Coordinator-queued requests stay accounted at every load: the
+    coordinator eventually dispatches its whole backlog (every request
+    completes exactly once), and every cloned pair's slower response is
+    absorbed at the coordinator and surfaced as ``n_filtered`` — the LÆDGE
+    counterpart of the hedge invariant fixed in PR 1.  Above the
+    coordinator-CPU saturation point (load ≳ 0.15 here) this is exactly
+    the overload regime."""
+    r = run("laedge", load=load, n=2500)
+    assert r.n_completed == r.n_requests
+    # the coordinator absorbs the slower copy of every pair: nothing
+    # redundant leaks to the clients, and absorption == cloning
+    assert r.n_filtered == r.n_cloned
+    assert r.n_redundant_at_client == 0
+    assert r.n_clone_drops == 0              # LÆDGE copies are ordinary
+
+
 @given(load=st.floats(0.1, 0.85), seed=st.integers(0, 10))
 @settings(max_examples=10, deadline=None)
 def test_netclone_conservation_property(load, seed):
