@@ -8,6 +8,8 @@ results/dryrun) the roofline table.
     PYTHONPATH=src python -m benchmarks.run --engine fleetsim
     PYTHONPATH=src python -m benchmarks.run --engine fleetsim --racks 4 \
         --hot-rack-weight 3.0 --straggler-mult 2.0 --out /tmp/bench.json
+    PYTHONPATH=src python -m benchmarks.run --engine fleetsim \
+        --devices 2 --shard --out /tmp/bench_shard.json
     REPRO_BENCH_FAST=1  → reduced request counts (CI)
 
 ``--engine fleetsim`` runs the policy × load × seed grid through the jitted,
@@ -18,8 +20,17 @@ latencies, and the DES cross-validation scoreboard.  ``--out PATH`` writes
 the artifact (by default nothing is written, keeping the checked-in
 ``results/bench/BENCH_fleetsim.json`` reference stable).  ``--racks N``
 sweeps the 2-tier fabric (spine + N rack switches); ``--hot-rack-weight`` /
-``--straggler-mult`` inject rack skew.  Unknown figure names and
-``--engine`` values are hard argparse errors.
+``--straggler-mult`` inject rack skew.
+
+``--shard`` lays the grid out over every visible device
+(``repro.fleetsim.shard``); ``--devices N`` splits a CPU host into N XLA
+devices (``--xla_force_host_platform_device_count``, set before jax
+initializes) so the multi-device program is benchmarkable anywhere;
+``--hedge-delays 50,75,100`` adds the traced hedge-delay grid axis (the
+delay/load plane in one program).  The artifact records the device count
+and sharding layout so the perf trajectory distinguishes 1-device from
+N-device runs.  Unknown figure names and ``--engine`` values are hard
+argparse errors.
 """
 
 from __future__ import annotations
@@ -91,11 +102,16 @@ def run_fleetsim(args) -> None:
     import os
     from dataclasses import replace
 
+    import jax
+
+    from repro.fleetsim.shard import ShardSpec
     from repro.fleetsim.validate import cross_validate_spec
-    from repro.scenarios import Scenario, ServiceSpec, SweepSpec
+    from repro.scenarios import Scenario, ServiceSpec, SweepSpec, registry
 
     fast = bool(int(os.environ.get("REPRO_BENCH_FAST", "0")))
     loads = [0.1, 0.2, 0.35, 0.5, 0.65, 0.8, 0.9, 0.95][:args.loads]
+    delays = tuple(float(d) for d in args.hedge_delays.split(",")) \
+        if args.hedge_delays else ()
     base = Scenario(
         name="bench", racks=args.racks, servers=args.servers,
         workers=args.workers,
@@ -104,18 +120,30 @@ def run_fleetsim(args) -> None:
         straggler_rack_mult=args.straggler_mult,
         service=ServiceSpec.exponential(25.0))
     spec = SweepSpec(base=base, policies="registered", loads=tuple(loads),
-                     seeds=tuple(range(args.seeds)))
+                     seeds=tuple(range(args.seeds)),
+                     hedge_delays=delays,
+                     shard=ShardSpec() if args.shard else None)
     policies = spec.resolved_policies()
 
-    n_cfg = len(policies) * len(loads) * args.seeds
+    # the delay axis only multiplies hedge-timer policies
+    n_hedge = sum(registry.needs_hedge_timer(p) for p in policies)
+    n_cfg = (len(policies) + n_hedge * (max(len(delays), 1) - 1)) \
+        * len(loads) * args.seeds
     print(f"== fleetsim sweep: {len(policies)} policies x {len(loads)} loads "
-          f"x {args.seeds} seeds = {n_cfg} configurations, "
+          f"x {args.seeds} seeds"
+          + (f" (x {len(delays)} hedge delays on {n_hedge} hedge "
+             "policies)" if delays else "")
+          + f" = {n_cfg} configurations, "
           f"{args.racks} rack(s) x {args.servers} servers, "
           f"{base.n_ticks} ticks each ==")
+    if args.shard:
+        print(f"== sharded over {len(jax.devices())} device(s) "
+              f"(mesh axis 'grid') ==")
     sw = spec.run_fleetsim()
     print(f"compile {sw.compile_s:.1f}s  run {sw.wall_clock_s:.1f}s  "
           f"{sw.simulated_requests/1e6:.1f}M simulated requests  "
-          f"{sw.simulated_mrps:.2f} MRPS-simulated")
+          f"{sw.simulated_mrps:.2f} MRPS-simulated  "
+          f"[{sw.n_devices} device(s), pad {sw.n_pad}]")
 
     keys = list(sw.results[0].row().keys())
     print(",".join(keys))
@@ -157,6 +185,12 @@ def run_fleetsim(args) -> None:
         "rack_weights": [float(w) for w in weights],
         "straggler_rack_mult": args.straggler_mult,
         "n_configs": sw.n_configs,
+        # execution layout: 1-device vmap vs N-device sharded runs are not
+        # comparable rows on the perf trajectory, so the artifact says which
+        "n_devices": sw.n_devices,
+        "shard": None if sw.shard is None
+        else {**sw.shard.to_json(), "n_pad": sw.n_pad},
+        "hedge_delays": list(delays),
         "n_ticks": base.n_ticks,
         "wall_clock_s": round(sw.wall_clock_s, 3),
         "compile_s": round(sw.compile_s, 3),
@@ -195,6 +229,17 @@ def main() -> None:
                     help="arrival-weight multiplier for rack 0 (fleetsim)")
     ap.add_argument("--straggler-mult", type=float, default=1.0,
                     help="execution slowdown for the last rack (fleetsim)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="split a CPU host into N XLA devices "
+                         "(--xla_force_host_platform_device_count; must be "
+                         "set before jax initializes, which this does)")
+    ap.add_argument("--shard", action="store_true",
+                    help="shard the fleetsim sweep grid over every visible "
+                         "device (repro.fleetsim.shard); without it the "
+                         "grid vmaps onto one device")
+    ap.add_argument("--hedge-delays", default="",
+                    help="comma-separated hedge delays (µs) added as a "
+                         "traced grid axis, e.g. 50,75,100 (fleetsim)")
     ap.add_argument("--no-validate", action="store_true",
                     help="skip the DES cross-validation pass")
     ap.add_argument("--out", default=None,
@@ -202,6 +247,15 @@ def main() -> None:
                          "(default: none, so routine runs don't rewrite the "
                          "checked-in results/bench/BENCH_fleetsim.json)")
     args = ap.parse_args()
+
+    if args.devices:
+        # must land in the environment before jax creates its backend (all
+        # jax imports in this module are deliberately function-local)
+        import os
+
+        os.environ["XLA_FLAGS"] = " ".join(filter(None, [
+            os.environ.get("XLA_FLAGS", ""),
+            f"--xla_force_host_platform_device_count={args.devices}"]))
 
     if args.engine == "fleetsim":
         run_fleetsim(args)

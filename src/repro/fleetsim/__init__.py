@@ -6,10 +6,16 @@ switch soft state under a spine tier that places and filters inter-rack
 clones, per-server FCFS queues and workers, client receiver threads — in
 JAX arrays,
 advances it with one ``lax.scan``, and sweeps thousands of configurations in
-a single ``vmap``-ped device program.  The NetClone data-plane semantics are
+a single ``vmap``-ped device program — or, with ``repro.fleetsim.shard``,
+lays the sweep grid out over a device mesh so each device owns a contiguous
+slab of configurations (``shard_map`` over the ``'grid'`` axis, with an
+honest single-device fallback).  The NetClone data-plane semantics are
 shared with ``repro.core.switch_jax`` (the same state layout and filter
 rules), and results are cross-validated against the DES in
 ``repro.fleetsim.validate`` / ``tests/test_fleetsim.py``.
+
+See ``docs/architecture.md`` for the layer map (DES ↔ scenarios registry ↔
+FleetSim stages ↔ shard layer) and the array-layout tables.
 """
 
 from repro.fleetsim.config import (
@@ -28,12 +34,21 @@ from repro.fleetsim.state import (
     Metrics,
     init_fleet_state,
 )
+from repro.fleetsim.shard import (
+    GridPlan,
+    ShardedMetrics,
+    ShardSpec,
+    plan_grid,
+    simulate_batch_sharded,
+)
 from repro.fleetsim.sweep import SweepResult, rack_skew, sweep_grid
 from repro.fleetsim.validate import (
     CrossCheck,
+    ShardCheck,
     cross_check_scenario,
     cross_validate,
     cross_validate_spec,
+    shard_equivalence,
 )
 
 __all__ = [
@@ -56,8 +71,15 @@ __all__ = [
     "SweepResult",
     "rack_skew",
     "sweep_grid",
+    "ShardSpec",
+    "GridPlan",
+    "ShardedMetrics",
+    "plan_grid",
+    "simulate_batch_sharded",
     "CrossCheck",
+    "ShardCheck",
     "cross_validate",
     "cross_validate_spec",
     "cross_check_scenario",
+    "shard_equivalence",
 ]

@@ -263,6 +263,21 @@ class FleetConfig:
         lanes = int(math.ceil(lam + 6.0 * math.sqrt(max(lam, 1e-9)) + 2.0))
         return replace(self, max_arrivals=max(4, lanes))
 
+    def with_hedge_horizon(self, max_delay_us: float) -> "FleetConfig":
+        """Deepen the hedge timer wheel to cover per-run (traced) delays up
+        to ``max_delay_us`` (``RunParams.hedge_delay_ticks`` is a sweep
+        axis, but the wheel's depth is a compile-time shape).  No-op when
+        the stage is compiled out or the resolved wheel already covers the
+        horizon — so delay-less sweeps keep their exact program."""
+        if not self.hedge_timer:
+            return self
+        if max_delay_us <= 0:
+            raise ValueError("max_delay_us must be positive")
+        horizon = max(1, round(max_delay_us / self.dt_us))
+        if self.wheel_slots > horizon:
+            return self
+        return replace(self, hedge_wheel_slots=horizon + 1)
+
     def with_policy_stages(self, policies) -> "FleetConfig":
         """Compile in the pipeline stages the given policy names need
         (coordinator / hedge_timer registry hooks).  A config whose policy

@@ -1,4 +1,5 @@
-"""FleetSim engine: one ``lax.scan`` advances the fabric, ``vmap`` sweeps it.
+"""FleetSim engine: one ``lax.scan`` advances the fabric, ``vmap`` sweeps it
+(and ``repro.fleetsim.shard`` spreads the sweep grid over a device mesh).
 
 Fixed-timestep (``dt_us``) time-stepped simulation of the full NetClone
 testbed — open-loop Poisson clients, a 2-tier switch fabric (per-rack ToR
@@ -66,6 +67,13 @@ class RunParams(NamedTuple):
     # per-tick arrival counts for cfg.arrival == "trace" (shape (n_ticks,));
     # (0,) for Poisson runs, whose counts the device draws itself
     arrival_counts: jax.Array
+    # () int32 — hedge-timer delay in ticks.  A *traced* sweep axis (one
+    # program maps the delay/load plane, see sweep_grid's hedge_delays);
+    # defaults to the static cfg.hedge_delay_ticks and is ignored — but
+    # still carried — when the hedge_timer stage is compiled out.  (The
+    # default is a plain int so importing this module does not create a
+    # device array; every construction path fills it explicitly.)
+    hedge_delay_ticks: jax.Array | int = 0
 
 
 def check_fabric_arrays(cfg: FleetConfig, slowdown=None, rack_weights=None,
@@ -128,13 +136,34 @@ def check_policy_stages(cfg: FleetConfig, policy_id: int) -> None:
             "automatically via FleetConfig.with_policy_stages)")
 
 
+def check_hedge_delay(cfg: FleetConfig,
+                      hedge_delay_us: float | None) -> int:
+    """Resolve a per-run hedge delay to ticks and bound it by the static
+    wheel depth (shared by :func:`make_params` and ``sweep.sweep_grid``).
+    ``None`` means the config's own ``hedge_delay_us``."""
+    if hedge_delay_us is None:
+        return cfg.hedge_delay_ticks
+    if hedge_delay_us <= 0:
+        raise ValueError("hedge_delay_us must be positive")
+    ticks = max(1, round(hedge_delay_us / cfg.dt_us))
+    if cfg.hedge_timer and ticks >= cfg.wheel_slots:
+        raise ValueError(
+            f"hedge_delay_us={hedge_delay_us} is {ticks} ticks but the "
+            f"timer wheel has only {cfg.wheel_slots} slots; deepen it "
+            "first (FleetConfig.with_hedge_horizon — sweep_grid does this "
+            "automatically for its hedge_delays axis)")
+    return ticks
+
+
 def make_params(cfg: FleetConfig, policy_id: int, rate_per_us: float,
                 seed: int, slowdown=None, rack_weights=None,
                 fail_window: tuple[int, int] | None = None,
-                arrival_counts=None) -> RunParams:
+                arrival_counts=None,
+                hedge_delay_us: float | None = None) -> RunParams:
     slowdown, rack_weights = check_fabric_arrays(cfg, slowdown, rack_weights)
     arrival_counts = check_arrival_counts(cfg, arrival_counts)
     check_policy_stages(cfg, policy_id)
+    delay_ticks = check_hedge_delay(cfg, hedge_delay_us)
     f0, f1 = fail_window if fail_window is not None \
         else (cfg.n_ticks + 1, cfg.n_ticks + 1)
     return RunParams(policy_id=jnp.int32(policy_id),
@@ -144,7 +173,8 @@ def make_params(cfg: FleetConfig, policy_id: int, rate_per_us: float,
                      rack_weights=jnp.asarray(rack_weights, jnp.float32),
                      fail_from_tick=jnp.int32(f0),
                      fail_until_tick=jnp.int32(f1),
-                     arrival_counts=jnp.asarray(arrival_counts, jnp.int32))
+                     arrival_counts=jnp.asarray(arrival_counts, jnp.int32),
+                     hedge_delay_ticks=jnp.int32(delay_ticks))
 
 
 # ------------------------------------------------------------------ runner --

@@ -53,6 +53,9 @@ class FleetResult:
     n_hedges_armed: int = 0    # timer-wheel entries armed
     n_hedges_cancelled: int = 0  # … cancelled (earlier response / fabric dark)
     n_wheel_dropped: int = 0   # … lost to wheel-slot exhaustion
+    # the (possibly swept) hedge delay this cell ran with; 0.0 when the
+    # hedge_timer stage was compiled out
+    hedge_delay_us: float = 0.0
     rack_completed: tuple[int, ...] = ()       # in-window, by serving rack
     rack_p50_us: tuple[float, ...] = ()
     rack_p99_us: tuple[float, ...] = ()
@@ -81,6 +84,7 @@ class FleetResult:
             "coord_queued": self.n_coord_queued,
             "coord_overflow": self.n_coord_overflow,
             "hedges_armed": self.n_hedges_armed,
+            "hedge_delay_us": round(self.hedge_delay_us, 2),
             "empty_q": round(self.empty_queue_fraction, 3),
             "rack_completed": list(self.rack_completed),
             "rack_p50_us": [round(v, 1) for v in self.rack_p50_us],
@@ -103,13 +107,19 @@ def hist_percentile(hist: np.ndarray, mids: np.ndarray, q: float) -> float:
 
 
 def summarize(cfg: FleetConfig, metrics, *, policy: str, load: float,
-              rate_per_us: float, seed: int) -> FleetResult:
+              rate_per_us: float, seed: int,
+              hedge_delay_us: float | None = None) -> FleetResult:
     """Reduce one configuration's device metrics (already indexed out of the
     sweep batch and moved to host) to a :class:`FleetResult`.
 
     ``metrics.hist`` is ``(n_racks, hist_bins)``; fabric-wide statistics
     come from the rack-summed histogram, per-rack tails from each row.
+    ``hedge_delay_us`` records the (possibly swept) per-run delay; ``None``
+    resolves to the config's static delay when the hedge stage is compiled
+    in, else 0.0.
     """
+    if hedge_delay_us is None:
+        hedge_delay_us = cfg.hedge_delay_us if cfg.hedge_timer else 0.0
     rack_hist = np.asarray(metrics.hist).reshape(cfg.n_racks, cfg.hist_bins)
     hist = rack_hist.sum(axis=0)
     mids = bin_mids_us(cfg)
@@ -146,6 +156,7 @@ def summarize(cfg: FleetConfig, metrics, *, policy: str, load: float,
         n_hedges_armed=int(metrics.n_hedges_armed),
         n_hedges_cancelled=int(metrics.n_hedges_cancelled),
         n_wheel_dropped=int(metrics.n_wheel_dropped),
+        hedge_delay_us=float(hedge_delay_us),
         rack_completed=tuple(int(r.sum()) for r in rack_hist),
         rack_p50_us=tuple(hist_percentile(r, mids, 50.0) for r in rack_hist),
         rack_p99_us=tuple(hist_percentile(r, mids, 99.0) for r in rack_hist),

@@ -32,9 +32,15 @@ branches, so a flag-off program contains zero ops from them and the
   bottleneck;
 * ``stage_hedge_timer`` (``cfg.hedge_timer``) — a fixed-depth timer wheel:
   policies registered with a ``hedge_timer`` hook arm a deferred duplicate
-  at arrival; ``hedge_delay_us`` later the wheel fires it as a CLO=2 copy
+  at arrival; one hedge delay later the wheel fires it as a CLO=2 copy
   unless the original's response already passed the filter switch (the
-  parked fingerprint doubles as the DES's cancel-on-first-response).
+  parked fingerprint doubles as the DES's cancel-on-first-response).  The
+  delay itself is a *traced* per-run input
+  (``RunParams.hedge_delay_ticks``, defaulting to the static
+  ``cfg.hedge_delay_us``), so a single vmapped — or mesh-sharded, see
+  ``repro.fleetsim.shard`` — program sweeps the delay/load plane; only
+  the wheel's depth stays compile-time static and must cover the largest
+  swept delay (``FleetConfig.with_hedge_horizon``).
 
 Both sub-states live in ``FleetState.coord`` / ``FleetState.wheel`` and are
 ``None`` when their stage is compiled out.  Policy-specific behaviour
@@ -447,10 +453,11 @@ def stage_coordinator(cfg: FleetConfig, params, state: FleetState,
     return state, lanes
 
 
-def wheel_arm(wheel: HedgeWheel, tick, delay_ticks: int, arm_mask,
+def wheel_arm(wheel: HedgeWheel, tick, delay_ticks, arm_mask,
               entries):
     """Arm ``entries`` (rows of ``WH`` fields, one per True in
-    ``arm_mask``) to fire ``delay_ticks`` from ``tick``.
+    ``arm_mask``) to fire ``delay_ticks`` from ``tick`` (``delay_ticks``
+    may be a traced scalar — the delay is a sweep axis).
 
     Returns ``(wheel, armed_mask, dropped_mask)``: lanes beyond the slot's
     free width are dropped *deterministically* — the latest lanes lose, and
@@ -531,8 +538,11 @@ def stage_hedge_timer(cfg: FleetConfig, params, state: FleetState,
         routed.frack.astype(jnp.float32),
     ], axis=1)
     assert rows.shape[1] == WH
+    # the delay is a *traced* per-run value (RunParams.hedge_delay_ticks),
+    # so one vmapped/sharded program maps the whole delay/load plane; the
+    # static wheel depth bounds it (checked by engine.check_hedge_delay)
     wheel, armed, dropped = wheel_arm(wheel, arr.tick,
-                                      cfg.hedge_delay_ticks,
+                                      params.hedge_delay_ticks,
                                       arr.active & is_hedge, rows)
     m = m._replace(n_hedges_armed=m.n_hedges_armed + armed.sum(),
                    n_wheel_dropped=m.n_wheel_dropped + dropped.sum())

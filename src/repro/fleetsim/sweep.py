@@ -1,24 +1,40 @@
-"""User-facing sweep API: policies × loads × seeds in one device program.
+"""User-facing sweep API: policies × loads × seeds (× delays) in one program.
 
 ``sweep_grid`` is the fleetsim counterpart of ``simulator.sweep_load``: it
 takes a DES-style :class:`ServiceProcess` (or a :class:`ServiceSpec`), builds
 the flat configuration grid, and runs the whole grid through one jitted,
 vmapped program.  Stragglers and switch failure windows are per-run inputs,
-so heterogeneous scenarios ride in the same batch.
+so heterogeneous scenarios ride in the same batch; ``hedge_delays`` adds the
+hedge-timer delay as a fourth, *traced* grid axis (the delay/load plane in
+one program), and ``shard`` lays the grid out over a device mesh
+(:mod:`repro.fleetsim.shard`) so thousand-point grids spread across a pod —
+``shard=None`` keeps the exact single-device program.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import numpy as np
 
 from repro.core.workloads import ServiceProcess, load_to_rate
 from repro.fleetsim.config import POLICY_IDS, FleetConfig, ServiceSpec
-from repro.fleetsim.engine import RunParams, check_fabric_arrays, lower_batch
+from repro.fleetsim.engine import (
+    RunParams,
+    check_fabric_arrays,
+    check_hedge_delay,
+    lower_batch,
+)
 from repro.fleetsim.metrics import FleetResult, summarize
+from repro.fleetsim.shard import (
+    ShardSpec,
+    as_shard,
+    lower_sharded,
+    plan_grid,
+)
+from repro.scenarios import registry
 
 
 @dataclass
@@ -28,6 +44,14 @@ class SweepResult:
     compile_s: float
     n_configs: int
     simulated_requests: int
+    # --- execution layout (recorded so benchmark artifacts distinguish
+    # 1-device vmap runs from N-device sharded runs) ---
+    n_devices: int = 1
+    shard: ShardSpec | None = None
+    n_pad: int = 0                   # grid rows added to divide the mesh
+    # grid-aggregate latency histogram (n_racks, hist_bins), merged
+    # device-locally + tree-reduced on the mesh (shard.ShardedMetrics)
+    grid_hist: np.ndarray | None = field(default=None, repr=False)
 
     @property
     def simulated_mrps(self) -> float:
@@ -36,12 +60,16 @@ class SweepResult:
         return self.simulated_requests / max(self.wall_clock_s, 1e-9) / 1e6
 
     def select(self, policy: str | None = None,
-               load: float | None = None) -> list[FleetResult]:
+               load: float | None = None,
+               hedge_delay_us: float | None = None) -> list[FleetResult]:
         out = self.results
         if policy is not None:
             out = [r for r in out if r.policy == policy]
         if load is not None:
             out = [r for r in out if abs(r.offered_load - load) < 1e-9]
+        if hedge_delay_us is not None:
+            out = [r for r in out
+                   if abs(r.hedge_delay_us - hedge_delay_us) < 1e-9]
         return out
 
 
@@ -78,9 +106,12 @@ def sweep_grid(
     rack_weights: np.ndarray | None = None,
     fail_window_ticks: tuple[int, int] | None = None,
     resize_arrival_lanes: bool = True,
+    hedge_delays: list[float] | None = None,
+    shard: ShardSpec | int | None = None,
     **cfg_kw,
 ) -> SweepResult:
-    """Run every (policy, load, seed) combination in one jitted program.
+    """Run every (policy, load, seed[, hedge delay]) combination in one
+    jitted program.
 
     ``slowdown`` (shape ``(n_racks * n_servers,)`` or ``(n_racks,
     n_servers)``) injects stragglers into every run; ``rack_weights``
@@ -90,9 +121,23 @@ def sweep_grid(
     ticks and wipes its soft state at recovery, for all runs.
     ``resize_arrival_lanes=False`` keeps ``cfg.max_arrivals`` exactly as
     given (pinned array shapes — e.g. golden scenarios) instead of applying
-    Poisson headroom for the hottest load.  Returns host-side results plus
-    wall-clock accounting (compile time reported separately so sweep cost
-    is judged on the steady-state number).
+    Poisson headroom for the hottest load.
+
+    ``hedge_delays`` adds a *traced* hedge-delay axis
+    (``RunParams.hedge_delay_ticks``): at least one policy in the set must
+    use the ``hedge_timer`` stage, the timer wheel is deepened to the
+    largest delay automatically, and every hedge-policy result row records
+    its ``hedge_delay_us``.  The axis only multiplies policies that
+    actually read the delay — a policy without the ``hedge_timer`` hook
+    keeps its single row (reported with ``hedge_delay_us=0``) instead of
+    running per-delay duplicates.  ``shard`` (``None`` | device count |
+    ``ShardSpec``)
+    spreads the grid over a device mesh via :mod:`repro.fleetsim.shard`;
+    ``None`` compiles the exact single-device program.
+
+    Returns host-side results plus wall-clock accounting (compile time
+    reported separately so sweep cost is judged on the steady-state
+    number).
     """
     spec = _as_spec(service)
     if cfg is None:
@@ -115,6 +160,14 @@ def sweep_grid(
     # compile in the optional pipeline stages the policy set needs (a set
     # needing neither leaves cfg — and its compiled program — untouched)
     cfg = cfg.with_policy_stages(policies)
+    if hedge_delays:
+        if not any(registry.needs_hedge_timer(p) for p in policies):
+            raise ValueError(
+                "hedge_delays sweeps the hedge_timer stage's delay, but no "
+                f"policy in {policies} uses that stage")
+        cfg = cfg.with_hedge_horizon(max(hedge_delays))
+    delays: list[float | None] = list(hedge_delays) if hedge_delays \
+        else [None]
 
     rates = {ld: load_to_rate(ld, spec, cfg.n_servers_total, cfg.n_workers)
              for ld in loads}
@@ -123,40 +176,71 @@ def sweep_grid(
 
     slowdown, rack_weights = check_fabric_arrays(cfg, slowdown, rack_weights)
 
-    grid = [(p, ld, s) for p in policies for ld in loads for s in seeds]
+    grid = [(p, ld, s, hd) for p in policies for ld in loads for s in seeds
+            # the delay axis only multiplies policies that read the delay
+            for hd in (delays if registry.needs_hedge_timer(p) else [None])]
     g = len(grid)
     f0, f1 = fail_window_ticks if fail_window_ticks is not None \
         else (cfg.n_ticks + 1, cfg.n_ticks + 1)
     params = RunParams(
-        policy_id=np.asarray([POLICY_IDS[p] for p, _, _ in grid], np.int32),
-        rate_per_us=np.asarray([rates[ld] for _, ld, _ in grid], np.float32),
-        seed=np.asarray([s for _, _, s in grid], np.int32),
+        policy_id=np.asarray([POLICY_IDS[p] for p, *_ in grid], np.int32),
+        rate_per_us=np.asarray([rates[ld] for _, ld, _, _ in grid],
+                               np.float32),
+        seed=np.asarray([s for _, _, s, _ in grid], np.int32),
         slowdown=np.broadcast_to(slowdown,
                                  (g, cfg.n_servers_total)).copy(),
         rack_weights=np.broadcast_to(rack_weights, (g, cfg.n_racks)).copy(),
         fail_from_tick=np.full(g, f0, np.int32),
         fail_until_tick=np.full(g, f1, np.int32),
         arrival_counts=np.zeros((g, 0), np.int32),
+        hedge_delay_ticks=np.asarray(
+            [check_hedge_delay(cfg, hd) for *_, hd in grid], np.int32),
     )
     params = jax.tree.map(lambda a: jax.numpy.asarray(a), params)
 
+    shard_spec = as_shard(shard)
     t0 = time.perf_counter()
-    compiled = lower_batch(cfg, params).compile()
-    t_compile = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    metrics = jax.block_until_ready(compiled(params))
-    wall = time.perf_counter() - t0
+    if shard_spec is None:
+        compiled = lower_batch(cfg, params).compile()
+        t_compile = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        metrics = jax.block_until_ready(compiled(params))
+        wall = time.perf_counter() - t0
+        n_devices, n_pad, grid_hist = 1, 0, None
+    else:
+        plan = plan_grid(params, shard_spec)
+        compiled = lower_sharded(cfg, plan).compile()
+        t_compile = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        metrics, grid_hist = jax.block_until_ready(
+            compiled(plan.params, plan.mask))
+        wall = time.perf_counter() - t0
+        metrics = jax.tree.map(lambda a: a[:g], metrics)
+        n_devices, n_pad = plan.mesh.size, plan.n_pad
+        grid_hist = np.asarray(jax.device_get(grid_hist))
 
     metrics = jax.device_get(metrics)
+    if grid_hist is None:
+        # unsharded fallback: same aggregate, reduced on host (the device
+        # program stays the exact pre-shard one)
+        grid_hist = np.asarray(metrics.hist).sum(axis=0)
     results = []
-    for i, (p, ld, s) in enumerate(grid):
+    for i, (p, ld, s, hd) in enumerate(grid):
         one = jax.tree.map(lambda a: a[i], metrics)
+        # policies that never arm the wheel report delay 0, not the
+        # config default a hedge co-policy happened to compile in
+        hd_report = hd if registry.needs_hedge_timer(p) else 0.0
         results.append(summarize(cfg, one, policy=p, load=ld,
-                                 rate_per_us=rates[ld], seed=s))
+                                 rate_per_us=rates[ld], seed=s,
+                                 hedge_delay_us=hd_report))
     return SweepResult(
         results=results,
         wall_clock_s=wall,
         compile_s=t_compile,
         n_configs=g,
         simulated_requests=sum(r.n_arrivals for r in results),
+        n_devices=n_devices,
+        shard=shard_spec,
+        n_pad=n_pad,
+        grid_hist=grid_hist,
     )

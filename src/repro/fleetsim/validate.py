@@ -15,11 +15,24 @@ known modelling gaps:
 50 k-request run is itself a noisy order statistic); the *ordering* checks
 (NetClone beats baseline at low load, clone rate declines with load) are the
 paper's actual claims and are enforced exactly.
+
+A second, much stricter family of checks lives here too:
+:func:`shard_equivalence` compares a mesh-**sharded** sweep
+(:mod:`repro.fleetsim.shard`) against the unsharded vmap of the same grid.
+Those are the *same* per-configuration program on the same inputs, so the
+tolerance policy is exactness: every integer counter and the full latency
+histogram must match bit-for-bit, and derived float statistics must agree
+within ``SHARD_STAT_RTOL`` (a pure round-trip allowance — they are computed
+on host from the identical histograms, so in practice they match exactly
+too).
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import math
+from dataclasses import dataclass, fields
+
+import numpy as np
 
 from repro.core.simulator import Simulator
 from repro.core.workloads import ServiceProcess
@@ -219,6 +232,14 @@ def cross_validate_spec(spec, n_requests: int = 20_000,
         raise ValueError("cross_validate_spec sweeps Poisson load grids; "
                          "cross-check trace scenarios one at a time with "
                          "cross_check_scenario")
+    if getattr(spec, "hedge_delays", ()):
+        # the DES hedge policy runs its own fixed delay, so a traced
+        # delay axis has no DES counterpart to compare against — and the
+        # (policy, load, seed) cell lookup below would silently pick an
+        # arbitrary delay's row
+        raise ValueError("cross_validate_spec cannot sweep hedge_delays "
+                         "(no DES-side delay axis); drop it from the spec "
+                         "— shard_equivalence accepts it")
     if n_ticks is None:
         min_rate = min(load_to_rate(ld, base.service, base.servers,
                                     base.workers)
@@ -280,6 +301,116 @@ def cross_validate(
     return checks
 
 
+# --------------------------------------------------- sharded == unsharded --
+#: relative tolerance on *derived float statistics* between a sharded and
+#: an unsharded run of the same grid.  Counters and histograms are compared
+#: exactly — each grid cell runs the identical per-configuration program,
+#: sharding only changes which device runs it.
+SHARD_STAT_RTOL = 1e-6
+
+
+@dataclass
+class ShardCheck:
+    """One grid cell of a sharded-vs-unsharded comparison."""
+
+    policy: str
+    load: float
+    seed: int
+    hedge_delay_us: float
+    counters_ok: bool     # every int field (and int tuple) exact
+    stat_rel: float       # worst relative error over float statistics
+    mismatched: tuple[str, ...] = ()   # field names that differed
+
+    @property
+    def stats_ok(self) -> bool:
+        return self.stat_rel <= SHARD_STAT_RTOL
+
+    @property
+    def ok(self) -> bool:
+        return self.counters_ok and self.stats_ok
+
+    def describe(self) -> str:
+        bad = f" mismatched={list(self.mismatched)}" if self.mismatched \
+            else ""
+        return (f"{self.policy}@{self.load:.2f}#s{self.seed}"
+                f"(d={self.hedge_delay_us:g}): counters "
+                f"{'exact' if self.counters_ok else 'DIFFER'}, "
+                f"stat_rel={self.stat_rel:.2e}"
+                f"[{'ok' if self.stats_ok else 'FAIL'}]{bad}")
+
+
+def _float_rel(a: float, b: float) -> float:
+    if math.isnan(a) and math.isnan(b):
+        return 0.0
+    return abs(a - b) / max(abs(a), abs(b), 1e-12)
+
+
+def _compare_results(a: FleetResult, b: FleetResult) -> ShardCheck:
+    counters_ok, worst, bad = True, 0.0, []
+    for f in fields(FleetResult):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, str):
+            exact = va == vb
+        elif isinstance(va, int):
+            exact = va == vb
+        elif isinstance(va, float):
+            rel = _float_rel(va, vb)
+            worst = max(worst, rel)
+            if rel > SHARD_STAT_RTOL:
+                bad.append(f.name)
+            continue
+        else:  # tuples (per-rack breakouts)
+            if len(va) != len(vb):
+                exact = False
+            elif va and isinstance(va[0], float):
+                rel = max((_float_rel(x, y) for x, y in zip(va, vb)),
+                          default=0.0)
+                worst = max(worst, rel)
+                if rel > SHARD_STAT_RTOL:
+                    bad.append(f.name)
+                continue
+            else:
+                exact = tuple(va) == tuple(vb)
+        if not exact:
+            counters_ok = False
+            bad.append(f.name)
+    return ShardCheck(policy=a.policy, load=a.offered_load, seed=a.seed,
+                      hedge_delay_us=a.hedge_delay_us,
+                      counters_ok=counters_ok, stat_rel=worst,
+                      mismatched=tuple(bad))
+
+
+def shard_equivalence(spec, shard=None,
+                      **cfg_overrides) -> tuple[list[ShardCheck], bool]:
+    """Run a :class:`repro.scenarios.SweepSpec` twice — unsharded vmap and
+    mesh-sharded (``shard``: device count / ``ShardSpec``; ``None`` takes
+    the spec's own ``shard`` or every visible device) — and compare.
+
+    Returns ``(per-cell checks, grid_hist_equal)``.  The aggregate
+    histogram check covers the psum tree-reduction path: the sharded
+    merge (device-local sum + cross-mesh psum) must equal the host-side
+    sum of the unsharded per-cell histograms exactly (integer counts).
+    """
+    from dataclasses import replace as dc_replace
+
+    from repro.fleetsim.shard import ShardSpec, as_shard
+
+    shard = as_shard(shard) if shard is not None \
+        else (spec.shard or ShardSpec())
+    plain = dc_replace(spec, shard=None)
+    base = plain.run_fleetsim(**cfg_overrides)
+    sharded = dc_replace(spec, shard=shard).run_fleetsim(**cfg_overrides)
+    if len(base.results) != len(sharded.results):
+        raise AssertionError(
+            f"grid size changed under sharding: {len(base.results)} vs "
+            f"{len(sharded.results)} (padding must be stripped)")
+    checks = [_compare_results(x, y)
+              for x, y in zip(base.results, sharded.results)]
+    hist_ok = bool(np.array_equal(np.asarray(base.grid_hist),
+                                  np.asarray(sharded.grid_hist)))
+    return checks, hist_ok
+
+
 def main(argv: list[str] | None = None) -> int:
     """Full DES cross-validation — too slow for per-PR CI, run nightly.
 
@@ -306,17 +437,32 @@ def main(argv: list[str] | None = None) -> int:
                          "name); 'none' skips the trace check")
     ap.add_argument("--trace-ticks", type=int, default=None,
                     help="override the trace scenario's n_ticks")
+    ap.add_argument("--shard", type=int, default=0,
+                    help="also check sharded == unsharded on the --grid "
+                         "sweep over this many devices (0 skips; multi-"
+                         "device on a CPU host needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count set "
+                         "before jax initializes)")
+    ap.add_argument("--shard-ticks", type=int, default=6_000,
+                    help="n_ticks for the shard-equivalence sweep (exact "
+                         "comparison, so short runs suffice)")
     ap.add_argument("--out", default=None,
                     help="write the cross-validation report (one row per "
                          "checked point) to this JSON artifact")
     args = ap.parse_args(argv)
 
     checks = []
+    shard_checks, shard_hist_ok = [], True
     if args.grid != "none":
         spec = SweepSpec.from_file(args.grid)
         print(f"== grid {args.grid}: {spec.resolved_policies()} x "
               f"{spec.resolved_loads()} ==")
         checks = cross_validate_spec(spec, n_requests=args.requests)
+        if args.shard:
+            print(f"== shard equivalence: grid x {args.shard} device(s), "
+                  f"{args.shard_ticks} ticks ==")
+            shard_checks, shard_hist_ok = shard_equivalence(
+                spec, shard=args.shard, n_ticks=args.shard_ticks)
     if args.trace != "none":
         sc = Scenario.from_file(args.trace)
         print(f"== trace {args.trace}: {sc.policy}, "
@@ -327,6 +473,14 @@ def main(argv: list[str] | None = None) -> int:
         n_ok += c.ok
         print(("[PASS] " if c.ok else "[FAIL] ") + c.describe())
     print(f"{n_ok}/{len(checks)} points within tolerance")
+    n_shard_ok = 0
+    if shard_checks:
+        for s in shard_checks:
+            n_shard_ok += s.ok
+            print(("[PASS] " if s.ok else "[FAIL] ") + s.describe())
+        print(("[PASS] " if shard_hist_ok else "[FAIL] ")
+              + "grid_hist psum merge == host-side sum")
+        print(f"{n_shard_ok}/{len(shard_checks)} sharded cells identical")
     if args.out:
         import dataclasses
         import json
@@ -341,9 +495,15 @@ def main(argv: list[str] | None = None) -> int:
             "checks": [{**dataclasses.asdict(c), "pass": bool(c.ok),
                         "saturated": bool(c.saturated),
                         "detail": c.describe()} for c in checks],
+            "shard_devices": args.shard,
+            "shard_grid_hist_ok": bool(shard_hist_ok),
+            "shard_checks": [{**dataclasses.asdict(s), "pass": bool(s.ok),
+                              "detail": s.describe()}
+                             for s in shard_checks],
         }, indent=1))
         print(f"wrote {out}")
-    return 0 if n_ok == len(checks) else 1
+    shard_all_ok = shard_hist_ok and n_shard_ok == len(shard_checks)
+    return 0 if (n_ok == len(checks) and shard_all_ok) else 1
 
 
 if __name__ == "__main__":

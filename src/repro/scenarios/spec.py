@@ -33,6 +33,7 @@ from repro.core.workloads import load_to_rate, rate_to_load
 from repro.fleetsim.config import FleetConfig
 from repro.fleetsim.engine import make_params, simulate
 from repro.fleetsim.metrics import FleetResult, summarize
+from repro.fleetsim.shard import ShardSpec
 from repro.fleetsim.sweep import SweepResult, rack_skew, sweep_grid
 from repro.scenarios import registry
 from repro.scenarios.arrival import (
@@ -237,18 +238,26 @@ class Scenario:
 
 @dataclass(frozen=True)
 class SweepSpec:
-    """A declarative policy × load × seed grid over a base scenario.
+    """A declarative policy × load × seed (× hedge-delay) grid over a base
+    scenario.
 
     ``policies="registered"`` (the default) expands *at run time* to every
     policy registered for both engines, so custom registrations enter every
     sweep without touching the spec.  Empty ``loads`` means the base
-    scenario's single load.
+    scenario's single load.  ``hedge_delays`` adds the hedge-timer delay as
+    a traced grid axis (needs a ``hedge_timer`` policy in the set), and
+    ``shard`` lays the whole grid out over a device mesh
+    (:class:`repro.fleetsim.shard.ShardSpec`; ``None`` keeps the exact
+    single-device vmap program) — both Poisson-grid features, rejected for
+    trace replays.
     """
 
     base: Scenario
     policies: tuple[str, ...] | str = "registered"
     loads: tuple[float, ...] = ()
     seeds: tuple[int, ...] = (0,)
+    hedge_delays: tuple[float, ...] = ()
+    shard: ShardSpec | None = None
 
     def resolved_policies(self) -> list[str]:
         if self.policies == "registered":
@@ -288,7 +297,13 @@ class SweepSpec:
                               cfg=cfg, slowdown=slowdown,
                               rack_weights=weights,
                               fail_window_ticks=base.fail_window_ticks,
-                              resize_arrival_lanes=not pinned)
+                              resize_arrival_lanes=not pinned,
+                              hedge_delays=list(self.hedge_delays) or None,
+                              shard=self.shard)
+        if self.shard is not None or self.hedge_delays:
+            raise ValueError("shard / hedge_delays are Poisson-grid "
+                             "features (one vmapped program); trace "
+                             "replays run per-scenario")
         if len(self.resolved_loads()) > 1:
             # a trace IS the offered schedule: each load cell would run the
             # same configuration and waste device time on duplicate rows
@@ -299,22 +314,33 @@ class SweepSpec:
 
     # --------------------------------------------------------------- JSON --
     def to_json(self) -> dict:
-        return {"base": self.base.to_json(),
-                "policies": (self.policies if isinstance(self.policies, str)
-                             else list(self.policies)),
-                "loads": list(self.loads), "seeds": list(self.seeds)}
+        d = {"base": self.base.to_json(),
+             "policies": (self.policies if isinstance(self.policies, str)
+                          else list(self.policies)),
+             "loads": list(self.loads), "seeds": list(self.seeds)}
+        if self.hedge_delays:
+            d["hedge_delays"] = list(self.hedge_delays)
+        if self.shard is not None:
+            d["shard"] = self.shard.to_json()
+        return d
+
+    _JSON_KEYS = ("base", "policies", "loads", "seeds", "hedge_delays",
+                  "shard")
 
     @classmethod
     def from_json(cls, d: dict) -> "SweepSpec":
-        unknown = sorted(set(d) - {"base", "policies", "loads", "seeds"})
+        unknown = sorted(set(d) - set(cls._JSON_KEYS))
         if unknown:
             raise ValueError(f"unknown sweep keys {unknown}; "
-                             "valid: ['base', 'loads', 'policies', 'seeds']")
+                             f"valid: {sorted(cls._JSON_KEYS)}")
         pol = d.get("policies", "registered")
+        shard = d.get("shard")
         return cls(base=Scenario.from_json(d["base"]),
                    policies=pol if isinstance(pol, str) else tuple(pol),
                    loads=tuple(d.get("loads", ())),
-                   seeds=tuple(d.get("seeds", (0,))))
+                   seeds=tuple(d.get("seeds", (0,))),
+                   hedge_delays=tuple(d.get("hedge_delays", ())),
+                   shard=None if shard is None else ShardSpec.from_json(shard))
 
     def to_file(self, path) -> Path:
         path = Path(path)

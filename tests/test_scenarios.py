@@ -233,6 +233,33 @@ def test_scenario_json_round_trip(tmp_path):
     assert SweepSpec.from_json(spec.to_json()).policies == "registered"
 
 
+def test_sweepspec_shard_json_round_trip(tmp_path):
+    """SweepSpec carries its sharding layout and hedge-delay axis through
+    JSON (the shard sub-object round-trips, absent fields stay defaults,
+    and a misspelled shard key fails loudly)."""
+    from repro.fleetsim.shard import ShardSpec
+
+    spec = SweepSpec(base=Scenario(name="sharded"),
+                     policies=("netclone", "hedge"), loads=(0.2, 0.6),
+                     seeds=(0, 1), hedge_delays=(50.0, 75.0),
+                     shard=ShardSpec(devices=4, axis="grid"))
+    assert SweepSpec.from_json(spec.to_json()) == spec
+    p = spec.to_file(tmp_path / "sharded.json")
+    assert SweepSpec.from_file(p) == spec
+    # defaults: unsharded specs serialize without the keys (old files and
+    # the bundled library stay readable + byte-stable)
+    plain = SweepSpec(base=Scenario(name="plain"))
+    assert "shard" not in plain.to_json()
+    assert "hedge_delays" not in plain.to_json()
+    back = SweepSpec.from_json(plain.to_json())
+    assert back.shard is None and back.hedge_delays == ()
+    with pytest.raises(ValueError, match="shard keys"):
+        SweepSpec.from_json({**spec.to_json(),
+                             "shard": {"device": 2}})
+    with pytest.raises(ValueError, match="sweep keys"):
+        SweepSpec.from_json({**spec.to_json(), "shards": {}})
+
+
 def test_from_json_rejects_unknown_keys():
     """Files are the API: a misspelled knob must fail loudly, not silently
     run a different experiment."""

@@ -1,0 +1,75 @@
+#!/usr/bin/env python3
+"""Fail on broken intra-repo markdown links in docs/ and the root *.md.
+
+Checks every ``[text](target)`` whose target is not an external URL
+(``http(s)://``, ``mailto:``) or a pure in-page anchor (``#...``): the
+referenced file or directory must exist relative to the markdown file
+(anchors and query strings are stripped first).  Inline code spans and
+fenced code blocks are ignored, so documentation may *show* link syntax
+without creating a link.
+
+Run from the repo root (CI's ``docs`` job does, and
+``tests/test_docs.py`` enforces it in tier-1):
+
+    python tools/check_docs_links.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+CODE_SPAN_RE = re.compile(r"`[^`]*`")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def md_files(root: Path) -> list[Path]:
+    files = sorted(root.glob("*.md"))
+    docs = root / "docs"
+    if docs.is_dir():
+        files += sorted(docs.rglob("*.md"))
+    return files
+
+
+def check_file(path: Path, root: Path) -> list[str]:
+    text = FENCE_RE.sub("", path.read_text())
+    text = CODE_SPAN_RE.sub("", text)
+    errors = []
+    for target in LINK_RE.findall(text):
+        if target.startswith(EXTERNAL) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0].split("?", 1)[0]
+        if not rel:
+            continue
+        # links resolve relative to the file; "../.." style badge links
+        # (GitHub Actions) escape the repo and cannot be checked here
+        resolved = (path.parent / rel).resolve()
+        try:
+            resolved.relative_to(root.resolve())
+        except ValueError:
+            continue
+        if not resolved.exists():
+            errors.append(f"{path.relative_to(root)}: broken link "
+                          f"-> {target}")
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    root = Path(argv[0]) if argv else Path.cwd()
+    files = md_files(root)
+    if not files:
+        print(f"no markdown files found under {root}", file=sys.stderr)
+        return 1
+    errors = [e for f in files for e in check_file(f, root)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
