@@ -140,10 +140,16 @@ def run_fleetsim(args) -> None:
         print(f"== sharded over {len(jax.devices())} device(s) "
               f"(mesh axis 'grid') ==")
     sw = spec.run_fleetsim()
+    cost = ""
+    if sw.cost_flops is not None:
+        cost = f"  {sw.cost_flops/1e9:.2f} GFLOP"
+        if sw.cost_bytes is not None:
+            cost += f"/{sw.cost_bytes/1e9:.2f} GB per launch"
     print(f"compile {sw.compile_s:.1f}s  run {sw.wall_clock_s:.1f}s  "
+          f"total {sw.compile_s + sw.wall_clock_s:.1f}s  "
           f"{sw.simulated_requests/1e6:.1f}M simulated requests  "
           f"{sw.simulated_mrps:.2f} MRPS-simulated  "
-          f"[{sw.n_devices} device(s), pad {sw.n_pad}]")
+          f"[{sw.n_devices} device(s), pad {sw.n_pad}]" + cost)
 
     keys = list(sw.results[0].row().keys())
     print(",".join(keys))
@@ -192,8 +198,19 @@ def run_fleetsim(args) -> None:
         else {**sw.shard.to_json(), "n_pad": sw.n_pad},
         "hedge_delays": list(delays),
         "n_ticks": base.n_ticks,
+        # compile vs run split is ALWAYS recorded separately: compile cost
+        # amortizes across runs of the same static config, run time is the
+        # perf-trend metric (tools/check_perf_trend.py)
         "wall_clock_s": round(sw.wall_clock_s, 3),
+        "run_s": round(sw.wall_clock_s, 3),
         "compile_s": round(sw.compile_s, 3),
+        "total_s": round(sw.compile_s + sw.wall_clock_s, 3),
+        # lowered-HLO cost analysis (XLA's per-launch estimate), when the
+        # backend exposes one
+        "cost_analysis": {
+            "flops": sw.cost_flops,
+            "bytes_accessed": sw.cost_bytes,
+        },
         "simulated_requests": sw.simulated_requests,
         "simulated_mrps": round(sw.simulated_mrps, 3),
         "sweep_spec": spec.to_json(),
@@ -275,12 +292,14 @@ def main() -> None:
         print(line)
 
     all_rows, all_claims = [], []
+    timing: dict[str, float] = {}
     for name in wanted:
         t0 = time.time()
         rows, claims = ALL_FIGURES[name]()
+        timing[name] = round(time.time() - t0, 3)
         all_rows += rows
         all_claims += claims
-        print(f"\n== {name} ({time.time()-t0:.1f}s) ==")
+        print(f"\n== {name} ({timing[name]:.1f}s) ==")
         if rows:
             keys = list(rows[0].keys())
             print(",".join(keys))
@@ -298,6 +317,9 @@ def main() -> None:
     (outdir / "claims.json").write_text(json.dumps(
         [{"id": c, "desc": d, "pass": bool(p), "detail": x}
          for c, d, p, x in all_claims], indent=1))
+    (outdir / "timing.json").write_text(json.dumps(
+        {"figures": timing, "total_s": round(sum(timing.values()), 3)},
+        indent=1))
 
     # roofline table, if the dry-run has produced artifacts
     if list(Path("results/dryrun").glob("*__sp.json")):

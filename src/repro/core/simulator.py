@@ -82,6 +82,26 @@ class SimResult:
     latencies_us: np.ndarray = field(repr=False, default=None)
     throughput_timeline: tuple = field(repr=False, default=None)
 
+    def row(self) -> dict:
+        """Flat summary row.  Keys shared with
+        :meth:`repro.fleetsim.metrics.FleetResult.row` carry the same names,
+        units, and rounding, so DES and FleetSim rows land in the same
+        tables/CSVs without translation (key parity is pinned by
+        ``tests/test_telemetry.py``)."""
+        return {
+            "policy": self.policy, "load": self.offered_load,
+            "throughput_mrps": round(self.throughput_mrps, 4),
+            "p50_us": round(self.p50_us, 1), "p99_us": round(self.p99_us, 1),
+            "p999_us": round(self.p999_us, 1),
+            "mean_us": round(self.mean_us, 1),
+            "cloned": self.n_cloned, "filtered": self.n_filtered,
+            "clone_drops": self.n_clone_drops,
+            "redundant": self.n_redundant_at_client,
+            "empty_q": round(self.empty_queue_fraction, 3),
+            # DES-only columns
+            "requests": self.n_requests, "completed": self.n_completed,
+        }
+
 
 class _Server:
     __slots__ = ("queue", "free_workers", "n_workers", "alive")

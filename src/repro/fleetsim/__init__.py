@@ -14,6 +14,11 @@ shared with ``repro.core.switch_jax`` (the same state layout and filter
 rules), and results are cross-validated against the DES in
 ``repro.fleetsim.validate`` / ``tests/test_fleetsim.py``.
 
+``repro.fleetsim.telemetry`` (FleetScope) adds compile-time-optional
+observability: a device-resident request-event ring buffer and windowed
+time-series, decoded host-side into per-request timelines and
+Chrome-trace/CSV exports — see ``docs/observability.md``.
+
 See ``docs/architecture.md`` for the layer map (DES ↔ scenarios registry ↔
 FleetSim stages ↔ shard layer) and the array-layout tables.
 """
@@ -24,7 +29,14 @@ from repro.fleetsim.config import (
     FleetConfig,
     ServiceSpec,
 )
-from repro.fleetsim.engine import RunParams, make_params, simulate, simulate_batch
+from repro.fleetsim.engine import (
+    RunParams,
+    make_params,
+    simulate,
+    simulate_batch,
+    simulate_batch_telemetry,
+    simulate_telemetry,
+)
 from repro.fleetsim.metrics import FleetResult, summarize
 from repro.fleetsim.state import (
     CoordState,
@@ -42,6 +54,14 @@ from repro.fleetsim.shard import (
     simulate_batch_sharded,
 )
 from repro.fleetsim.sweep import SweepResult, rack_skew, sweep_grid
+from repro.fleetsim.telemetry import (
+    RunTelemetry,
+    TelemetrySpec,
+    TickSeries,
+    TraceEvents,
+    decode_run,
+    write_run,
+)
 from repro.fleetsim.validate import (
     CrossCheck,
     ShardCheck,
@@ -60,6 +80,14 @@ __all__ = [
     "make_params",
     "simulate",
     "simulate_batch",
+    "simulate_telemetry",
+    "simulate_batch_telemetry",
+    "RunTelemetry",
+    "TelemetrySpec",
+    "TickSeries",
+    "TraceEvents",
+    "decode_run",
+    "write_run",
     "FleetResult",
     "summarize",
     "FabricSwitch",

@@ -155,6 +155,14 @@ class FleetConfig:
     hedge_delay_us: float = 75.0        # ≈p95 service — matches HedgePolicy
     hedge_wheel_slots: int = 0
     hedge_wheel_width: int = 0
+    # telemetry (FleetScope, repro.fleetsim.telemetry): device-resident
+    # request-event ring buffer + windowed time-series, compiled out exactly
+    # like coordinator/hedge_timer when the flag is off.  Telemetry is an
+    # observer — it draws no PRNG traffic and feeds nothing back, so a
+    # telemetry-on run keeps every Metrics counter bit-identical.
+    telemetry: bool = False
+    trace_cap: int = 2 ** 15            # ring-buffer records (flight recorder)
+    window_ticks: int = 1_000           # time-series window length (ticks)
     # response-filter backend: "vectorized" (one scatter/tick, default),
     # "scan" (exact lane-sequential switch_jax.filter semantics), or
     # "pallas" (kernels.fingerprint_filter — the VMEM-resident kernel)
@@ -188,6 +196,13 @@ class FleetConfig:
                              "(REQ_IDs are carried in float32 payloads)")
         if self.coordinator and self.coordinator_cap < 1:
             raise ValueError("coordinator_cap must be >= 1")
+        if self.telemetry:
+            if self.trace_cap < 1:
+                raise ValueError("trace_cap must be >= 1")
+            if not 1 <= self.window_ticks <= self.n_ticks:
+                raise ValueError("window_ticks must be in [1, n_ticks] "
+                                 f"(got {self.window_ticks} with n_ticks="
+                                 f"{self.n_ticks})")
         if self.hedge_timer:
             if self.hedge_delay_us <= 0:
                 raise ValueError("hedge_delay_us must be positive")
@@ -241,6 +256,11 @@ class FleetConfig:
         """Resolved per-slot entry budget: explicit, or ``max_arrivals``
         (every arrival lane of one tick can arm without drops)."""
         return self.hedge_wheel_width or self.max_arrivals
+
+    @property
+    def n_windows(self) -> int:
+        """Time-series windows per run (the last window may be partial)."""
+        return -(-self.n_ticks // self.window_ticks)
 
     @property
     def drain_per_tick(self) -> int:

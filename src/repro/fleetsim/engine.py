@@ -50,7 +50,8 @@ import numpy as np
 from repro.core.switch_jax import group_pairs_array
 from repro.fleetsim.config import FleetConfig
 from repro.fleetsim.stages import build_step
-from repro.fleetsim.state import Metrics, init_fleet_state
+from repro.fleetsim.state import FleetState, Metrics, init_fleet_state
+from repro.fleetsim.telemetry.device import SeriesState, TraceBuffer
 from repro.scenarios import registry
 
 
@@ -178,7 +179,7 @@ def make_params(cfg: FleetConfig, policy_id: int, rate_per_us: float,
 
 
 # ------------------------------------------------------------------ runner --
-def _simulate_core(cfg: FleetConfig, params: RunParams) -> Metrics:
+def _simulate_core(cfg: FleetConfig, params: RunParams) -> FleetState:
     gp = group_pairs_array(cfg.n_servers)
     k_pois, k0 = jax.random.split(jax.random.PRNGKey(params.seed))
     state = init_fleet_state(cfg, k0)
@@ -193,7 +194,13 @@ def _simulate_core(cfg: FleetConfig, params: RunParams) -> Metrics:
             k_pois, params.rate_per_us * cfg.dt_us, (cfg.n_ticks,)
         ).astype(jnp.int32)
     state, _ = jax.lax.scan(step, state, (ticks, n_raw))
-    return state.metrics
+    return state
+
+
+def _core_telemetry(cfg: FleetConfig, params: RunParams
+                    ) -> tuple[Metrics, TraceBuffer, SeriesState]:
+    state = _simulate_core(cfg, params)
+    return state.metrics, state.trace, state.series
 
 
 # The compiled programs bake in the registry's branch tables, so the jit
@@ -203,13 +210,28 @@ def _simulate_core(cfg: FleetConfig, params: RunParams) -> Metrics:
 @functools.partial(jax.jit, static_argnames=("cfg", "registry_version"))
 def _simulate_jit(cfg: FleetConfig, registry_version: int,
                   params: RunParams) -> Metrics:
-    return _simulate_core(cfg, params)
+    return _simulate_core(cfg, params).metrics
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "registry_version"))
 def _simulate_batch_jit(cfg: FleetConfig, registry_version: int,
                         params: RunParams) -> Metrics:
-    return jax.vmap(lambda p: _simulate_core(cfg, p))(params)
+    return jax.vmap(lambda p: _simulate_core(cfg, p).metrics)(params)
+
+
+# FleetScope variants: same scan, but the trace ring + series accumulators
+# ride out of the program alongside the metrics.  Separate jit entries so a
+# metrics-only caller never pays the telemetry transfer.
+@functools.partial(jax.jit, static_argnames=("cfg", "registry_version"))
+def _simulate_telemetry_jit(cfg: FleetConfig, registry_version: int,
+                            params: RunParams):
+    return _core_telemetry(cfg, params)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "registry_version"))
+def _simulate_batch_telemetry_jit(cfg: FleetConfig, registry_version: int,
+                                  params: RunParams):
+    return jax.vmap(lambda p: _core_telemetry(cfg, p))(params)
 
 
 def simulate(cfg: FleetConfig, params: RunParams) -> Metrics:
@@ -233,3 +255,36 @@ def lower_batch(cfg: FleetConfig, params: RunParams):
     """``jit(...).lower`` for the batch runner (sweeps report compile time
     separately from steady-state wall clock)."""
     return _simulate_batch_jit.lower(cfg, registry.version(), params)
+
+
+def _check_telemetry(cfg: FleetConfig) -> None:
+    if not cfg.telemetry:
+        raise ValueError(
+            "telemetry entry points need cfg.telemetry=True (the trace "
+            "ring and series stages are compile-time optional; rebuild the "
+            "config, or use TelemetrySpec.apply)")
+
+
+def simulate_telemetry(cfg: FleetConfig, params: RunParams
+                       ) -> tuple[Metrics, TraceBuffer, SeriesState]:
+    """One run with FleetScope on: ``(metrics, trace, series)``.  The
+    metrics are bit-identical to :func:`simulate` on the telemetry-off
+    config — telemetry observes, it never feeds back.  Decode the state
+    pair with :func:`repro.fleetsim.telemetry.decode_run`."""
+    _check_telemetry(cfg)
+    return _simulate_telemetry_jit(cfg, registry.version(), params)
+
+
+def simulate_batch_telemetry(cfg: FleetConfig, params: RunParams
+                             ) -> tuple[Metrics, TraceBuffer, SeriesState]:
+    """vmapped :func:`simulate_telemetry` — every output carries the leading
+    sweep axis; index one row out before decoding."""
+    _check_telemetry(cfg)
+    return _simulate_batch_telemetry_jit(cfg, registry.version(), params)
+
+
+def lower_batch_telemetry(cfg: FleetConfig, params: RunParams):
+    """``jit(...).lower`` for the telemetry batch runner."""
+    _check_telemetry(cfg)
+    return _simulate_batch_telemetry_jit.lower(cfg, registry.version(),
+                                               params)

@@ -102,7 +102,10 @@ def hist_percentile(hist: np.ndarray, mids: np.ndarray, q: float) -> float:
     if total == 0:
         return float("nan")
     c = np.cumsum(hist)
-    k = np.searchsorted(c, q / 100.0 * total, side="left")
+    # q == 0 asks for the minimum: a left-search for target 0 lands before
+    # the first *empty* bin too, so step right past leading zero-count bins
+    target = q / 100.0 * total
+    k = np.searchsorted(c, target, side="right" if target <= 0 else "left")
     return float(mids[min(k, len(mids) - 1)])
 
 

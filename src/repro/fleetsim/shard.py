@@ -208,7 +208,7 @@ def _simulate_sharded_jit(cfg: FleetConfig, registry_version: int,
     def slab(p: RunParams, m: jax.Array):
         # each device advances its contiguous slab with the per-config
         # program of the unsharded engine — no cross-device traffic …
-        met = jax.vmap(lambda q: _simulate_core(cfg, q))(p)
+        met = jax.vmap(lambda q: _simulate_core(cfg, q).metrics)(p)
         # … except the histogram merge: mask out padding, reduce the slab
         # locally, then one psum (tree/ring all-reduce) across the mesh
         keep = m.astype(met.hist.dtype)
@@ -248,6 +248,12 @@ def simulate_batch_sharded(cfg: FleetConfig, params: RunParams,
     ``tests/test_fleetsim_shard.py``).
     """
     spec = as_shard(shard)
+    if cfg.telemetry and spec is not None:
+        raise ValueError(
+            "telemetry is not supported on the sharded runner (the trace "
+            "ring would be sharded too and its per-device rings cannot be "
+            "merged into one chronological stream); run the traced config "
+            "unsharded, or drop cfg.telemetry for the sharded sweep")
     if spec is None:
         met = simulate_batch(cfg, params)
         return ShardedMetrics(metrics=met, grid_hist=met.hist.sum(axis=0))

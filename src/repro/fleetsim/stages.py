@@ -103,6 +103,26 @@ from repro.fleetsim.state import (
     FleetState,
     HedgeWheel,
 )
+from repro.fleetsim.telemetry.device import emit, series_record_hist, \
+    series_tick
+from repro.fleetsim.telemetry.events import (
+    CLONE_SRC_COORD,
+    CLONE_SRC_HEDGE,
+    CLONE_SRC_INTERRACK,
+    CLONE_SRC_LOCAL,
+    EV_ARRIVAL,
+    EV_CLIENT_COMPLETE,
+    EV_CLIENT_REDUNDANT,
+    EV_CLONE,
+    EV_COORD_DISPATCH,
+    EV_COORD_ENQ,
+    EV_FILTER_DROP,
+    EV_HEDGE_ARMED,
+    EV_HEDGE_CANCELLED,
+    EV_ROUTE,
+    EV_SERVER_FINISH,
+    EV_SERVER_START,
+)
 from repro.scenarios import registry
 
 
@@ -348,6 +368,18 @@ def stage_route(cfg: FleetConfig, params, state: FleetState, arr: Arrivals,
     ], axis=1)
     arr = arr._replace(pair=pair)
     state = state._replace(switch=switch, metrics=m)
+    if cfg.telemetry:
+        # REQ_IDs are assigned here at the spine, so the arrival event is
+        # emitted here too (same tick; emit order preserves stage order)
+        tr = emit(state.trace, arr_active, tick=arr.tick, kind=EV_ARRIVAL,
+                  rid=req_id, client=arr.client, arg=arr.home)
+        tr = emit(tr, arr_active, tick=arr.tick, kind=EV_ROUTE,
+                  rid=req_id, server=dst1, client=arr.client,
+                  arg=cloned.astype(jnp.int32))
+        tr = emit(tr, arr_active & cloned, tick=arr.tick, kind=EV_CLONE,
+                  rid=req_id, server=dst2, client=arr.client,
+                  arg=jnp.where(xrack, CLONE_SRC_INTERRACK, CLONE_SRC_LOCAL))
+        state = state._replace(trace=tr)
     lanes = Lanes(dst=d_dst, act=d_act, clo=d_clo, payload=payload)
     return state, arr, Routed(req_id=req_id, cloned=cloned, frack=frack), lanes
 
@@ -399,6 +431,11 @@ def stage_coordinator(cfg: FleetConfig, params, state: FleetState,
     count = coord.count + ok.sum()
     m = m._replace(n_coord_queued=m.n_coord_queued + ok.sum(),
                    n_coord_overflow=m.n_coord_overflow + (enq & ~ok).sum())
+    if cfg.telemetry:
+        state = state._replace(trace=emit(
+            state.trace, ok, tick=arr.tick, kind=EV_COORD_ENQ,
+            rid=routed.req_id, client=arr.client,
+            arg=coord.count + rank))  # arg: ring depth at enqueue
 
     # -- drain: FCFS pops onto idle servers, CPU-credit throttled ----------
     credit = jnp.minimum(coord.credit + dt / cpu, credit_cap)
@@ -439,6 +476,16 @@ def stage_coordinator(cfg: FleetConfig, params, state: FleetState,
               jnp.float32(0.0)), u)
     can, do_clone, s1, s2, row, hop1, hop2 = out
     m = m._replace(n_cloned=m.n_cloned + do_clone.sum())
+    if cfg.telemetry:
+        rid_pop = row[:, QF_RID].astype(jnp.int32)
+        cli_pop = row[:, QF_CLIENT].astype(jnp.int32)
+        tr = emit(state.trace, can, tick=arr.tick, kind=EV_COORD_DISPATCH,
+                  rid=rid_pop, server=s1, client=cli_pop,
+                  arg=do_clone.astype(jnp.int32))
+        tr = emit(tr, do_clone, tick=arr.tick, kind=EV_CLONE,
+                  rid=rid_pop, server=s2, client=cli_pop,
+                  arg=CLONE_SRC_COORD)
+        state = state._replace(trace=tr)
 
     pay1 = row.at[:, QF_HOP].set(jnp.where(can, hop1, 0.0))
     pay2 = row.at[:, QF_HOP].set(jnp.where(do_clone, hop2, 0.0))
@@ -524,6 +571,14 @@ def stage_hedge_timer(cfg: FleetConfig, params, state: FleetState,
     m = m._replace(n_cloned=m.n_cloned + fire.sum(),
                    n_hedges_cancelled=m.n_hedges_cancelled
                    + cancelled.sum())
+    if cfg.telemetry:
+        cli_w = entries[:, WHEEL_CLIENT].astype(jnp.int32)
+        dst_w = entries[:, WHEEL_DST].astype(jnp.int32)
+        tr = emit(state.trace, fire, tick=arr.tick, kind=EV_CLONE,
+                  rid=rid, server=dst_w, client=cli_w, arg=CLONE_SRC_HEDGE)
+        tr = emit(tr, cancelled, tick=arr.tick, kind=EV_HEDGE_CANCELLED,
+                  rid=rid, server=dst_w, client=cli_w)
+        state = state._replace(trace=tr)
 
     # -- arm this tick's arrivals ------------------------------------------
     dst2 = jax.lax.switch(params.policy_id, registry.hedge_timer_branches(),
@@ -546,7 +601,13 @@ def stage_hedge_timer(cfg: FleetConfig, params, state: FleetState,
                                       arr.active & is_hedge, rows)
     m = m._replace(n_hedges_armed=m.n_hedges_armed + armed.sum(),
                    n_wheel_dropped=m.n_wheel_dropped + dropped.sum())
-    return state._replace(metrics=m, wheel=wheel), lanes
+    state = state._replace(metrics=m, wheel=wheel)
+    if cfg.telemetry:
+        state = state._replace(trace=emit(
+            state.trace, armed, tick=arr.tick, kind=EV_HEDGE_ARMED,
+            rid=routed.req_id, server=dst2, client=arr.client,
+            arg=params.hedge_delay_ticks))  # arg: delay (ticks)
+    return state, lanes
 
 
 def stage_server(cfg: FleetConfig, params, state: FleetState,
@@ -673,6 +734,22 @@ def stage_server(cfg: FleetConfig, params, state: FleetState,
         workers=state.workers._replace(meta=worker_meta.reshape(RK, S, W,
                                                                 WF)),
         metrics=m)
+    if cfg.telemetry:
+        # finishes before starts: completions free the workers the dequeued
+        # jobs then occupy, and emit order is the within-tick order
+        tr = emit(state.trace, done_flat, tick=arr.tick,
+                  kind=EV_SERVER_FINISH,
+                  rid=meta_flat[:, WF_RID].astype(jnp.int32),
+                  server=jnp.repeat(srv_ids, W),
+                  client=meta_flat[:, WF_CLIENT].astype(jnp.int32),
+                  arg=jnp.repeat(q_count, W))  # arg: post-dequeue qlen
+        tr = emit(tr, startm.reshape(-1), tick=arr.tick,
+                  kind=EV_SERVER_START,
+                  rid=job[:, :, QF_RID].reshape(-1).astype(jnp.int32),
+                  server=jnp.repeat(srv_ids, R),
+                  client=job[:, :, QF_CLIENT].reshape(-1).astype(jnp.int32),
+                  arg=job[:, :, QF_CLO].reshape(-1).astype(jnp.int32))
+        state = state._replace(trace=tr)
     return state, Responses(
         active=resp_active,
         rid=resp[:, WF_RID].astype(jnp.int32),
@@ -709,6 +786,11 @@ def stage_response_filter(cfg: FleetConfig, params, state: FleetState,
         n_spine_filtered=m.n_spine_filtered
         + (drop & resp.active & (resp.frack == RK)).sum())
     state = state._replace(switch=switch, metrics=m)
+    if cfg.telemetry:
+        state = state._replace(trace=emit(
+            state.trace, drop & resp.active, tick=arr.tick,
+            kind=EV_FILTER_DROP, rid=resp.rid, server=resp.sid,
+            client=resp.client, arg=resp.frack))  # arg: filter switch
 
     if cfg.coordinator:
         # every response of a coordinator policy passes back through the
@@ -771,7 +853,18 @@ def stage_client(cfg: FleetConfig, params, state: FleetState,
     # response (non-recorded lanes scatter out of bounds and drop)
     m = m._replace(hist=m.hist.at[resp.sid // S, bins].add(1, mode="drop"),
                    n_completed_win=m.n_completed_win + rec.sum())
-    return state._replace(dedup=dedup, client_backlog=backlog, metrics=m)
+    state = state._replace(dedup=dedup, client_backlog=backlog, metrics=m)
+    if cfg.telemetry:
+        tr = emit(state.trace, first, tick=arr.tick,
+                  kind=EV_CLIENT_COMPLETE, rid=resp.rid, server=resp.sid,
+                  client=resp.client,
+                  arg=jnp.round(lat).astype(jnp.int32))  # arg: latency (µs)
+        tr = emit(tr, redundant, tick=arr.tick, kind=EV_CLIENT_REDUNDANT,
+                  rid=resp.rid, server=resp.sid, client=resp.client)
+        series = series_record_hist(state.series,
+                                    arr.tick // cfg.window_ticks, bins)
+        state = state._replace(trace=tr, series=series)
+    return state
 
 
 def _filter_responses(cfg, server_state, tables, rid, idx, clo, sid, qlen,
@@ -848,6 +941,10 @@ def build_step(cfg: FleetConfig, params, group_pairs: jax.Array):
         state, resp = stage_server(cfg, params, state, arr, lanes)
         state, drop = stage_response_filter(cfg, params, state, arr, resp)
         state = stage_client(cfg, params, state, arr, resp, drop, const_lat)
+        if cfg.telemetry:
+            state = state._replace(series=series_tick(
+                cfg, state.series, state.metrics, state.queues.count,
+                arr.tick))
         return state, None
 
     return step

@@ -33,6 +33,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.fleetsim.config import FleetConfig
+from repro.fleetsim.telemetry.device import (
+    SeriesState,
+    TraceBuffer,
+    init_series_state,
+    init_trace_buffer,
+)
 
 # queue payload fields, (R, S, Q, QF) — float32, ints exact below 2^24
 QF_BASE = 0     # intrinsic service demand (µs)
@@ -180,6 +186,11 @@ class FleetState(NamedTuple):
     # programs carry exactly the state they always did)
     coord: CoordState | None = None
     wheel: HedgeWheel | None = None
+    # observability sub-states (FleetScope, repro.fleetsim.telemetry):
+    # request-event ring buffer + windowed time-series, gated by the static
+    # cfg.telemetry flag the same way — pure observers, never fed back
+    trace: TraceBuffer | None = None
+    series: SeriesState | None = None
 
 
 def init_fabric_switch(cfg: FleetConfig) -> FabricSwitch:
@@ -238,4 +249,6 @@ def init_fleet_state(cfg: FleetConfig, key: jax.Array) -> FleetState:
         metrics=init_metrics(cfg),
         coord=init_coord_state(cfg) if cfg.coordinator else None,
         wheel=init_hedge_wheel(cfg) if cfg.hedge_timer else None,
+        trace=init_trace_buffer(cfg) if cfg.telemetry else None,
+        series=init_series_state(cfg) if cfg.telemetry else None,
     )

@@ -26,6 +26,7 @@ from repro.fleetsim.engine import (
     check_fabric_arrays,
     check_hedge_delay,
     lower_batch,
+    lower_batch_telemetry,
 )
 from repro.fleetsim.metrics import FleetResult, summarize
 from repro.fleetsim.shard import (
@@ -34,6 +35,8 @@ from repro.fleetsim.shard import (
     lower_sharded,
     plan_grid,
 )
+from repro.fleetsim.telemetry import RunTelemetry, decode_run
+from repro.fleetsim.telemetry.device import SeriesState, TraceBuffer
 from repro.scenarios import registry
 
 
@@ -52,6 +55,14 @@ class SweepResult:
     # grid-aggregate latency histogram (n_racks, hist_bins), merged
     # device-locally + tree-reduced on the mesh (shard.ShardedMetrics)
     grid_hist: np.ndarray | None = field(default=None, repr=False)
+    # FleetScope: one decoded RunTelemetry per grid row (same order as
+    # results) when the sweep ran with cfg.telemetry; None otherwise
+    telemetry: list[RunTelemetry] | None = field(default=None, repr=False)
+    # lowered-HLO cost analysis of the compiled sweep program (XLA's
+    # estimate for ONE program execution, i.e. the whole batch), when the
+    # backend exposes it; None otherwise
+    cost_flops: float | None = None
+    cost_bytes: float | None = None
 
     @property
     def simulated_mrps(self) -> float:
@@ -71,6 +82,25 @@ class SweepResult:
             out = [r for r in out
                    if abs(r.hedge_delay_us - hedge_delay_us) < 1e-9]
         return out
+
+
+def compiled_cost(compiled) -> tuple[float | None, float | None]:
+    """Pull ``(flops, bytes accessed)`` out of a compiled program's
+    ``cost_analysis()`` — best effort: backends that expose nothing (or a
+    different shape; older jax returned a list of dicts) yield ``None``s
+    rather than failing the sweep."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return None, None
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    if not isinstance(ca, dict):
+        return None, None
+    flops = ca.get("flops")
+    nbytes = ca.get("bytes accessed")
+    return (float(flops) if flops is not None else None,
+            float(nbytes) if nbytes is not None else None)
 
 
 def _as_spec(service) -> ServiceSpec:
@@ -199,12 +229,23 @@ def sweep_grid(
     params = jax.tree.map(lambda a: jax.numpy.asarray(a), params)
 
     shard_spec = as_shard(shard)
+    if cfg.telemetry and shard_spec is not None:
+        raise ValueError(
+            "telemetry sweeps cannot shard (per-device trace rings have no "
+            "merged chronological order); drop shard= or cfg.telemetry")
+    tel_state = None
     t0 = time.perf_counter()
     if shard_spec is None:
-        compiled = lower_batch(cfg, params).compile()
+        lowered = lower_batch_telemetry(cfg, params) if cfg.telemetry \
+            else lower_batch(cfg, params)
+        compiled = lowered.compile()
         t_compile = time.perf_counter() - t0
         t0 = time.perf_counter()
-        metrics = jax.block_until_ready(compiled(params))
+        if cfg.telemetry:
+            metrics, trace, series = jax.block_until_ready(compiled(params))
+            tel_state = (trace, series)
+        else:
+            metrics = jax.block_until_ready(compiled(params))
         wall = time.perf_counter() - t0
         n_devices, n_pad, grid_hist = 1, 0, None
     else:
@@ -219,7 +260,16 @@ def sweep_grid(
         n_devices, n_pad = plan.mesh.size, plan.n_pad
         grid_hist = np.asarray(jax.device_get(grid_hist))
 
+    cost_flops, cost_bytes = compiled_cost(compiled)
     metrics = jax.device_get(metrics)
+    telemetry = None
+    if tel_state is not None:
+        trace, series = jax.device_get(tel_state)
+        telemetry = [
+            decode_run(cfg,
+                       TraceBuffer(count=trace.count[i], data=trace.data[i]),
+                       SeriesState(*(np.asarray(a)[i] for a in series)))
+            for i in range(g)]
     if grid_hist is None:
         # unsharded fallback: same aggregate, reduced on host (the device
         # program stays the exact pre-shard one)
@@ -243,4 +293,7 @@ def sweep_grid(
         shard=shard_spec,
         n_pad=n_pad,
         grid_hist=grid_hist,
+        telemetry=telemetry,
+        cost_flops=cost_flops,
+        cost_bytes=cost_bytes,
     )

@@ -1,0 +1,66 @@
+"""FleetScope: compile-time-optional observability for the FleetSim engine.
+
+Three layers, all gated by the static ``FleetConfig.telemetry`` flag exactly
+like the coordinator / hedge-timer stages (flag off ⇒ nothing compiles in and
+the program is bit-identical to a build without this package):
+
+* **device** — the scan-carry telemetry state: a request-event ring buffer
+  (:class:`TraceBuffer`) written by ``emit()`` calls inside the PR-4 stages,
+  and the windowed time-series accumulator (:class:`SeriesState`);
+* **decode** — host-side views: chronological :class:`TraceEvents`,
+  per-request timelines, and the per-window :class:`TickSeries`;
+* **export** — Chrome-trace/Perfetto JSON + CSV artifact bundles
+  (:func:`write_run`).
+
+:class:`TelemetrySpec` is the declarative knob block scenarios carry.
+Telemetry is a pure observer: it consumes no PRNG draws and feeds nothing
+back, so a telemetry-on run reproduces every ``Metrics`` counter of the
+telemetry-off run bit-for-bit.
+"""
+
+from repro.fleetsim.telemetry.decode import (
+    RunTelemetry,
+    TickSeries,
+    TraceEvents,
+    decode_run,
+    decode_series,
+    decode_trace,
+)
+from repro.fleetsim.telemetry.device import (
+    SeriesState,
+    TraceBuffer,
+    emit,
+    init_series_state,
+    init_trace_buffer,
+    series_record_hist,
+    series_tick,
+)
+from repro.fleetsim.telemetry.events import (
+    EVENT_ARG,
+    EVENT_NAMES,
+    SERIES_COUNTERS,
+)
+from repro.fleetsim.telemetry.export import chrome_trace, write_run
+from repro.fleetsim.telemetry.spec import TelemetrySpec
+
+__all__ = [
+    "EVENT_ARG",
+    "EVENT_NAMES",
+    "SERIES_COUNTERS",
+    "RunTelemetry",
+    "SeriesState",
+    "TelemetrySpec",
+    "TickSeries",
+    "TraceBuffer",
+    "TraceEvents",
+    "chrome_trace",
+    "decode_run",
+    "decode_series",
+    "decode_trace",
+    "emit",
+    "init_series_state",
+    "init_trace_buffer",
+    "series_record_hist",
+    "series_tick",
+    "write_run",
+]

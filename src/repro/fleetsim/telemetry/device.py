@@ -1,0 +1,118 @@
+"""Device-side FleetScope state: the trace ring buffer + windowed series.
+
+Both sub-states ride in :class:`~repro.fleetsim.state.FleetState` exactly
+like the coordinator / hedge-wheel stage states: ``None`` when
+``FleetConfig.telemetry`` is off (so flag-off programs carry — and compile —
+exactly the state they always did), live arrays advanced by the emit points
+in ``stages.py`` when it is on.  Telemetry is an *observer*: it consumes no
+PRNG draws and never feeds back into routing, service, or filtering, so a
+telemetry-on run leaves every ``Metrics`` counter bit-identical to the
+telemetry-off run (enforced in ``tests/test_telemetry.py``).
+
+The ring buffer is a flight recorder: ``count`` is the total number of
+records ever emitted, ``data`` the last ``trace_cap`` of them (oldest
+overwritten first).  The host-side decoder reconstructs chronological order
+from ``count % cap`` and reports ``count - cap`` lost records when the run
+outgrew the buffer.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.fleetsim.config import FleetConfig
+from repro.fleetsim.telemetry.events import REC, SERIES_COUNTERS
+
+
+class TraceBuffer(NamedTuple):
+    """Request-event flight recorder (see ``telemetry.events`` for layout)."""
+
+    count: jax.Array    # () int32 — total records emitted (may exceed cap)
+    data: jax.Array     # (trace_cap, REC) int32 ring of the latest records
+
+
+class SeriesState(NamedTuple):
+    """Per-window time-series accumulators (window = ``cfg.window_ticks``).
+
+    ``counters`` rows are *cumulative* ``Metrics`` snapshots taken at every
+    tick of the window (sequential scan ⇒ the last tick's write survives,
+    i.e. the end-of-window value); differencing adjacent rows host-side
+    yields per-window rates without carrying any per-tick delta state.
+    """
+
+    counters: jax.Array   # (n_windows, len(SERIES_COUNTERS)) int32 snapshots
+    qsum: jax.Array       # (n_windows,) int32 — Σ over ticks of queued total
+    qmax: jax.Array       # (n_windows,) int32 — max per-server queue depth
+    hist: jax.Array       # (n_windows, hist_bins) int32 — in-window latencies
+
+
+def init_trace_buffer(cfg: FleetConfig) -> TraceBuffer:
+    return TraceBuffer(count=jnp.zeros((), jnp.int32),
+                       data=jnp.zeros((cfg.trace_cap, REC), jnp.int32))
+
+
+def init_series_state(cfg: FleetConfig) -> SeriesState:
+    w = cfg.n_windows
+    return SeriesState(
+        counters=jnp.zeros((w, len(SERIES_COUNTERS)), jnp.int32),
+        qsum=jnp.zeros((w,), jnp.int32),
+        qmax=jnp.zeros((w,), jnp.int32),
+        hist=jnp.zeros((w, cfg.hist_bins), jnp.int32),
+    )
+
+
+def emit(trace: TraceBuffer, mask: jax.Array, *, tick, kind, rid,
+         server=None, client=None, arg=None) -> TraceBuffer:
+    """Append one record per True lane of ``mask`` to the ring buffer.
+
+    ``tick``/``kind`` may be scalars; ``rid``/``server``/``client``/``arg``
+    scalars or per-lane arrays (``None`` → -1/0 filler).  Lanes keep their
+    order: the i-th active lane lands ``i`` slots past the current write
+    head, so within-tick ordering mirrors stage order.  Oldest records are
+    overwritten when the buffer is full — ``count`` keeps the true total.
+    """
+    n = mask.shape[0]
+    cap = trace.data.shape[0]
+
+    def col(v, fill):
+        if v is None:
+            return jnp.full((n,), fill, jnp.int32)
+        v = jnp.asarray(v)
+        return jnp.broadcast_to(v.astype(jnp.int32), (n,))
+
+    rows = jnp.stack([col(tick, 0), col(kind, 0), col(rid, -1),
+                      col(server, -1), col(client, -1), col(arg, 0)], axis=1)
+    m = mask.astype(jnp.int32)
+    rank = jnp.cumsum(m) - m
+    pos = (trace.count + rank) % cap
+    data = trace.data.at[jnp.where(mask, pos, cap)].set(rows, mode="drop")
+    return TraceBuffer(count=trace.count + mask.sum(), data=data)
+
+
+def series_record_hist(series: SeriesState, window: jax.Array,
+                       bins: jax.Array) -> SeriesState:
+    """Scatter this tick's recorded-latency bins into the window's histogram
+    row (``bins`` already carries out-of-range values for unrecorded lanes,
+    which ``mode="drop"`` discards — same convention as ``Metrics.hist``)."""
+    return series._replace(
+        hist=series.hist.at[window, bins].add(1, mode="drop"))
+
+
+def series_tick(cfg: FleetConfig, series: SeriesState, metrics,
+                queue_count: jax.Array, tick: jax.Array) -> SeriesState:
+    """End-of-tick series update: snapshot the cumulative counters into the
+    window row (last tick of the window wins) and accumulate queue-depth
+    sum/max for the window's mean/max gauges."""
+    w = tick // cfg.window_ticks
+    snap = jnp.stack([getattr(metrics, f).astype(jnp.int32)
+                      for f in SERIES_COUNTERS])
+    total_q = queue_count.sum().astype(jnp.int32)
+    max_q = queue_count.max().astype(jnp.int32)
+    return series._replace(
+        counters=series.counters.at[w].set(snap),
+        qsum=series.qsum.at[w].add(total_q),
+        qmax=series.qmax.at[w].max(max_q),
+    )

@@ -4,6 +4,8 @@
     PYTHONPATH=src python -m repro.scenarios trace_burst --engine both
     PYTHONPATH=src python -m repro.scenarios path/to/scenario.json \
         --ticks 4000 --out artifact.json
+    PYTHONPATH=src python -m repro.scenarios trace_burst \
+        --trace-out traces/   # FleetScope: Chrome-trace + CSV per scenario
 
 A positional argument is a scenario/sweep JSON file path or the bare name of
 a bundled library file.  ``--engine fleetsim`` is the default; ``--engine
@@ -44,21 +46,13 @@ def _print_listing() -> None:
               f"racks={base.get('racks', 1)} arrival={arr}")
 
 
-def _des_row(r) -> dict:
-    return {"engine": "des", "policy": r.policy, "load": r.offered_load,
-            "p50_us": round(r.p50_us, 1), "p99_us": round(r.p99_us, 1),
-            "throughput_mrps": round(r.throughput_mrps, 4),
-            "n_requests": r.n_requests, "cloned": r.n_cloned,
-            "filtered": r.n_filtered}
-
-
 def _try_des(sc, args, rows) -> None:
     """Run one scenario through the DES; with ``--engine both``, scenarios
     the DES cannot model (multi-rack, skew injection, DES-less policies)
     are skipped with a note instead of aborting the run."""
     try:
-        rows.append(_des_row(sc.run_des(n_requests=args.requests,
-                                        n_ticks=args.ticks)))
+        r = sc.run_des(n_requests=args.requests, n_ticks=args.ticks)
+        rows.append({"engine": "des", **r.row()})
     except ValueError as e:
         if args.engine == "des":
             raise SystemExit(f"error: {e}")
@@ -82,6 +76,32 @@ def run_file(args) -> list[dict]:
                     else [obj.policy])
     overrides = {"n_ticks": args.ticks} if args.ticks else {}
     rows: list[dict] = []
+    if args.trace_out:
+        # FleetScope export path: per-scenario traced runs (telemetry is
+        # forced on; counters stay bit-identical to the plain run)
+        from repro.fleetsim.telemetry import write_run
+
+        scenarios = obj.scenarios() if isinstance(obj, SweepSpec) else [obj]
+        for sc in scenarios:
+            result, tel = sc.run_traced(**overrides)
+            row = {"engine": "fleetsim", **result.row()}
+            rows.append(row)
+            paths = write_run(args.trace_out, sc.name, tel, summary=row)
+            print(f"[trace] {sc.name}: {len(tel.events)} events "
+                  f"({tel.events.n_lost} lost), {tel.series.n_windows} "
+                  f"windows -> {paths['trace'].parent}")
+        for row in rows:
+            print(",".join(f"{k}={v}" for k, v in row.items()))
+        if args.out:
+            out = Path(args.out)
+            out.parent.mkdir(parents=True, exist_ok=True)
+            out.write_text(json.dumps(
+                {"file": str(args.file), "engine": "fleetsim",
+                 "trace_out": str(args.trace_out),
+                 "scenarios": [s.to_json() for s in scenarios],
+                 "rows": rows}, indent=1, default=str))
+            print(f"wrote {out}")
+        return rows
     if isinstance(obj, SweepSpec):
         scs = obj.scenarios()
         print(f"sweep {obj.base.name}: {len(scs)} scenarios "
@@ -133,6 +153,9 @@ def main(argv: list[str] | None = None) -> int:
                     help="DES requests per scenario (Poisson runs)")
     ap.add_argument("--out", default=None,
                     help="write result rows to this JSON artifact")
+    ap.add_argument("--trace-out", default=None, metavar="DIR",
+                    help="run with FleetScope telemetry and write one "
+                         "Chrome-trace/CSV bundle per scenario under DIR")
     args = ap.parse_args(argv)
 
     if args.list:

@@ -31,10 +31,11 @@ import numpy as np
 
 from repro.core.workloads import load_to_rate, rate_to_load
 from repro.fleetsim.config import FleetConfig
-from repro.fleetsim.engine import make_params, simulate
+from repro.fleetsim.engine import make_params, simulate, simulate_telemetry
 from repro.fleetsim.metrics import FleetResult, summarize
 from repro.fleetsim.shard import ShardSpec
 from repro.fleetsim.sweep import SweepResult, rack_skew, sweep_grid
+from repro.fleetsim.telemetry import RunTelemetry, TelemetrySpec, decode_run
 from repro.scenarios import registry
 from repro.scenarios.arrival import (
     ArrivalProcess,
@@ -75,6 +76,9 @@ class Scenario:
     fail_window_ticks: tuple[int, int] | None = None
     queue_cap: int | None = None
     max_arrivals: int | None = None
+    # FleetScope observability (repro.fleetsim.telemetry): None runs the
+    # exact telemetry-off program; a spec compiles the trace/series stages in
+    telemetry: TelemetrySpec | None = None
 
     # ------------------------------------------------------------ derived --
     @property
@@ -119,6 +123,8 @@ class Scenario:
                 cfg = replace(cfg, max_arrivals=lanes)
             else:
                 cfg = cfg.with_arrival_headroom(self.rate_per_us(cfg.n_ticks))
+        if self.telemetry is not None:
+            cfg = self.telemetry.apply(cfg)
         return cfg
 
     def run_params(self, cfg: FleetConfig):
@@ -149,6 +155,26 @@ class Scenario:
                          load=self.effective_load(cfg.n_ticks),
                          rate_per_us=self.rate_per_us(cfg.n_ticks),
                          seed=self.seed)
+
+    def run_traced(self, **cfg_overrides
+                   ) -> tuple[FleetResult, RunTelemetry]:
+        """Run the array engine with FleetScope on and decode the trace.
+
+        A scenario without a ``telemetry`` spec gets the default one forced
+        on for this run; the result's counters are bit-identical either way
+        (telemetry observes, it never feeds back).  Export the bundle with
+        :func:`repro.fleetsim.telemetry.write_run`."""
+        sc = self if self.telemetry is not None and self.telemetry.enabled \
+            else replace(self, telemetry=TelemetrySpec())
+        cfg = sc.fleet_config(**cfg_overrides)
+        m, trace, series = jax.block_until_ready(
+            simulate_telemetry(cfg, sc.run_params(cfg)))
+        m, trace, series = jax.device_get((m, trace, series))
+        result = summarize(cfg, m, policy=self.policy,
+                           load=self.effective_load(cfg.n_ticks),
+                           rate_per_us=self.rate_per_us(cfg.n_ticks),
+                           seed=self.seed)
+        return result, decode_run(cfg, trace, series)
 
     # ---------------------------------------------------------------- DES --
     def run_des(self, n_requests: int | None = None,
@@ -199,12 +225,15 @@ class Scenario:
             d["queue_cap"] = self.queue_cap
         if self.max_arrivals is not None:
             d["max_arrivals"] = self.max_arrivals
+        if self.telemetry is not None:
+            d["telemetry"] = self.telemetry.to_json()
         return d
 
     _JSON_KEYS = ("name", "policy", "load", "seed", "racks", "servers",
                   "workers", "n_ticks", "hot_rack_weight",
                   "straggler_rack_mult", "queue_cap", "max_arrivals",
-                  "service", "arrival", "slowdown", "fail_window_ticks")
+                  "service", "arrival", "slowdown", "fail_window_ticks",
+                  "telemetry")
 
     @classmethod
     def from_json(cls, d: dict) -> "Scenario":
@@ -216,7 +245,7 @@ class Scenario:
                              f"valid: {sorted(cls._JSON_KEYS)}")
         kw = {k: d[k] for k in cls._JSON_KEYS
               if k in d and k not in ("service", "arrival", "slowdown",
-                                      "fail_window_ticks")}
+                                      "fail_window_ticks", "telemetry")}
         if "service" in d:
             kw["service"] = ServiceSpec.from_json(d["service"])
         kw["arrival"] = arrival_from_json(d.get("arrival"))
@@ -224,6 +253,8 @@ class Scenario:
             kw["slowdown"] = tuple(float(v) for v in d["slowdown"])
         if d.get("fail_window_ticks") is not None:
             kw["fail_window_ticks"] = tuple(d["fail_window_ticks"])
+        if d.get("telemetry") is not None:
+            kw["telemetry"] = TelemetrySpec.from_json(d["telemetry"])
         return cls(**kw)
 
     def to_file(self, path) -> Path:

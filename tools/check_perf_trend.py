@@ -1,0 +1,127 @@
+"""Perf-trend guard: fail CI when the FleetSim engine gets markedly slower.
+
+Compares a freshly-produced sweep artifact (a CI smoke run of
+``benchmarks.run --engine fleetsim``) against the checked-in reference
+``results/bench/BENCH_fleetsim.json`` on the scale-normalized metric
+
+    config_ticks_per_s = n_configs * n_ticks / wall_clock_s
+
+i.e. how many configuration-ticks the engine advances per wall-clock second
+of *steady-state* run time (compile time is recorded separately in both
+artifacts and deliberately excluded: it amortizes, and CI runners vary far
+more on compile than on run).  The metric divides out grid size and run
+length but NOT per-tick overheads that only amortize at scale, so compare
+scale-matched artifacts: full sweeps against the default baseline, and the
+CI smoke grid against its checked-in smoke-scale twin
+
+    PYTHONPATH=src python tools/check_perf_trend.py \
+        --fresh bench-artifacts/BENCH_fleetsim_shard.json \
+        --baseline results/bench/BENCH_fleetsim_shard_smoke.json
+
+Residual differences (runner hardware, load) are what the
+``--max-regression`` margin absorbs.
+
+Exit status: 0 when the fresh rate is within the allowed regression of the
+baseline (or faster), 1 on a regression beyond the threshold, 2 on missing /
+malformed artifacts.  ``--update-baseline`` rewrites the reference from the
+fresh artifact instead of checking (for deliberate re-baselining commits).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+from pathlib import Path
+
+DEFAULT_BASELINE = Path(__file__).parent.parent / "results" / "bench" / \
+    "BENCH_fleetsim.json"
+
+
+def config_ticks_per_s(artifact: dict) -> float:
+    """The guarded metric of one sweep artifact (see module docstring)."""
+    n_configs = artifact["n_configs"]
+    n_ticks = artifact["n_ticks"]
+    wall = artifact["wall_clock_s"]
+    if n_configs <= 0 or n_ticks <= 0 or wall <= 0:
+        raise ValueError(
+            f"artifact has no usable timing: n_configs={n_configs}, "
+            f"n_ticks={n_ticks}, wall_clock_s={wall}")
+    return n_configs * n_ticks / wall
+
+
+def _load(path: Path) -> dict:
+    try:
+        return json.loads(path.read_text())
+    except FileNotFoundError:
+        raise SystemExit(f"error: artifact {path} does not exist "
+                         "(run benchmarks.run --engine fleetsim --out first)")
+    except json.JSONDecodeError as e:
+        raise SystemExit(f"error: artifact {path} is not valid JSON: {e}")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python tools/check_perf_trend.py",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--fresh", required=True, type=Path,
+                    help="freshly-produced sweep artifact (JSON from "
+                         "benchmarks.run --engine fleetsim --out)")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help=f"reference artifact (default: {DEFAULT_BASELINE})")
+    ap.add_argument("--max-regression", type=float, default=0.25,
+                    help="maximum allowed fractional slowdown of "
+                         "config_ticks_per_s vs the baseline (default 0.25)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="copy the fresh artifact over the baseline instead "
+                         "of checking (deliberate re-baselining)")
+    args = ap.parse_args(argv)
+
+    if not 0 < args.max_regression < 1:
+        ap.error("--max-regression must be in (0, 1)")
+
+    fresh_doc = _load(args.fresh)
+    try:
+        fresh = config_ticks_per_s(fresh_doc)
+    except (KeyError, ValueError, TypeError) as e:
+        print(f"error: fresh artifact {args.fresh} unusable: {e}")
+        return 2
+
+    if args.update_baseline:
+        args.baseline.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copyfile(args.fresh, args.baseline)
+        print(f"baseline {args.baseline} updated from {args.fresh} "
+              f"({fresh:,.0f} config-ticks/s)")
+        return 0
+
+    base_doc = _load(args.baseline)
+    try:
+        base = config_ticks_per_s(base_doc)
+    except (KeyError, ValueError, TypeError) as e:
+        print(f"error: baseline artifact {args.baseline} unusable: {e}")
+        return 2
+
+    floor = base * (1.0 - args.max_regression)
+    ratio = fresh / base
+    print(f"baseline : {base:12,.0f} config-ticks/s "
+          f"({base_doc['n_configs']} configs x {base_doc['n_ticks']} ticks "
+          f"in {base_doc['wall_clock_s']:.1f}s run)")
+    print(f"fresh    : {fresh:12,.0f} config-ticks/s "
+          f"({fresh_doc['n_configs']} configs x {fresh_doc['n_ticks']} ticks "
+          f"in {fresh_doc['wall_clock_s']:.1f}s run)")
+    print(f"ratio    : {ratio:.2f}x  (floor {1.0 - args.max_regression:.2f}x "
+          f"= {floor:,.0f} config-ticks/s)")
+    if fresh < floor:
+        print(f"FAIL: fresh rate is {(1.0 - ratio) * 100:.0f}% below the "
+              f"baseline (allowed: {args.max_regression * 100:.0f}%) — the "
+              "engine regressed, or the runner is unusually slow; if the "
+              "slowdown is intended, re-baseline with --update-baseline")
+        return 1
+    print("PASS: perf trend within bounds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
