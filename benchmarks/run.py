@@ -104,6 +104,7 @@ def run_fleetsim(args) -> None:
 
     import jax
 
+    from repro.fleetsim.options import EngineOptions
     from repro.fleetsim.shard import ShardSpec
     from repro.fleetsim.validate import cross_validate_spec
     from repro.scenarios import Scenario, ServiceSpec, SweepSpec, registry
@@ -119,10 +120,29 @@ def run_fleetsim(args) -> None:
         hot_rack_weight=args.hot_rack_weight,
         straggler_rack_mult=args.straggler_mult,
         service=ServiceSpec.exponential(25.0))
-    spec = SweepSpec(base=base, policies="registered", loads=tuple(loads),
+    # a sweep is ONE compiled program, so the fused backend can only take
+    # grids without the staged-only optional stages: drop stage policies
+    # (they keep their staged rows on the trajectory) instead of failing
+    pols: str | tuple = "registered"
+    if args.backend == "fused" and delays:
+        raise SystemExit("--hedge-delays sweeps the hedge_timer stage, "
+                         "which is staged-only; drop it or use "
+                         "--backend staged/auto")
+    if args.backend == "fused":
+        kept = [p for p in registry.two_engine_names()
+                if not (registry.needs_coordinator(p)
+                        or registry.needs_hedge_timer(p))]
+        dropped = sorted(set(registry.two_engine_names()) - set(kept))
+        if dropped:
+            print(f"== fused backend: stage policies {dropped} excluded "
+                  "(staged-only stages; they stay on the staged "
+                  "trajectory) ==")
+        pols = tuple(kept)
+    spec = SweepSpec(base=base, policies=pols, loads=tuple(loads),
                      seeds=tuple(range(args.seeds)),
                      hedge_delays=delays,
-                     shard=ShardSpec() if args.shard else None)
+                     shard=ShardSpec() if args.shard else None,
+                     engine=EngineOptions(backend=args.backend))
     policies = spec.resolved_policies()
 
     # the delay axis only multiplies hedge-timer policies
@@ -149,7 +169,8 @@ def run_fleetsim(args) -> None:
           f"total {sw.compile_s + sw.wall_clock_s:.1f}s  "
           f"{sw.simulated_requests/1e6:.1f}M simulated requests  "
           f"{sw.simulated_mrps:.2f} MRPS-simulated  "
-          f"[{sw.n_devices} device(s), pad {sw.n_pad}]" + cost)
+          f"[{sw.backend} backend, {sw.n_devices} device(s), pad {sw.n_pad}]"
+          + cost)
 
     keys = list(sw.results[0].row().keys())
     print(",".join(keys))
@@ -191,8 +212,10 @@ def run_fleetsim(args) -> None:
         "rack_weights": [float(w) for w in weights],
         "straggler_rack_mult": args.straggler_mult,
         "n_configs": sw.n_configs,
-        # execution layout: 1-device vmap vs N-device sharded runs are not
-        # comparable rows on the perf trajectory, so the artifact says which
+        # execution layout: staged vs fused and 1-device vmap vs N-device
+        # sharded runs are not comparable rows on the perf trajectory, so
+        # the artifact says which (check_perf_trend keys baselines on both)
+        "backend": sw.backend,
         "n_devices": sw.n_devices,
         "shard": None if sw.shard is None
         else {**sw.shard.to_json(), "n_pad": sw.n_pad},
@@ -206,10 +229,15 @@ def run_fleetsim(args) -> None:
         "compile_s": round(sw.compile_s, 3),
         "total_s": round(sw.compile_s + sw.wall_clock_s, 3),
         # lowered-HLO cost analysis (XLA's per-launch estimate), when the
-        # backend exposes one
+        # platform exposes one; an explicit reason rides along when it
+        # doesn't, so a null is a recorded fact rather than a missing key
         "cost_analysis": {
             "flops": sw.cost_flops,
             "bytes_accessed": sw.cost_bytes,
+            **({} if sw.cost_flops is not None else
+               {"unavailable_reason":
+                "compiled.cost_analysis() exposed no flops/bytes on this "
+                "platform/jax version for the compiled sweep program"}),
         },
         "simulated_requests": sw.simulated_requests,
         "simulated_mrps": round(sw.simulated_mrps, 3),
@@ -254,6 +282,12 @@ def main() -> None:
                     help="shard the fleetsim sweep grid over every visible "
                          "device (repro.fleetsim.shard); without it the "
                          "grid vmaps onto one device")
+    ap.add_argument("--backend", choices=["auto", "staged", "fused"],
+                    default="auto",
+                    help="fleetsim engine backend (EngineOptions.backend): "
+                         "'fused' runs the TickFuse chunked/packed engine "
+                         "on the non-stage policy matrix; 'auto' picks per "
+                         "platform")
     ap.add_argument("--hedge-delays", default="",
                     help="comma-separated hedge delays (µs) added as a "
                          "traced grid axis, e.g. 50,75,100 (fleetsim)")

@@ -9,7 +9,15 @@ advances it with one ``lax.scan``, and sweeps thousands of configurations in
 a single ``vmap``-ped device program — or, with ``repro.fleetsim.shard``,
 lays the sweep grid out over a device mesh so each device owns a contiguous
 slab of configurations (``shard_map`` over the ``'grid'`` axis, with an
-honest single-device fallback).  The NetClone data-plane semantics are
+honest single-device fallback).
+
+The one entry point is ``simulate(cfg, params, *, options=EngineOptions())``
+— single run or vmapped batch (inferred from the params leading axis),
+staged or fused (TickFuse, ``repro.fleetsim.fused``) backend, sharded or
+not, telemetry on or off, all selected by
+:class:`~repro.fleetsim.options.EngineOptions`.  The old per-shape names
+(``simulate_batch`` & co.) are deprecated shims — see ``docs/api.md``.
+The NetClone data-plane semantics are
 shared with ``repro.core.switch_jax`` (the same state layout and filter
 rules), and results are cross-validated against the DES in
 ``repro.fleetsim.validate`` / ``tests/test_fleetsim.py``.
@@ -31,6 +39,7 @@ from repro.fleetsim.config import (
 )
 from repro.fleetsim.engine import (
     RunParams,
+    lower,
     make_params,
     simulate,
     simulate_batch,
@@ -38,6 +47,7 @@ from repro.fleetsim.engine import (
     simulate_telemetry,
 )
 from repro.fleetsim.metrics import FleetResult, summarize
+from repro.fleetsim.options import EngineOptions
 from repro.fleetsim.state import (
     CoordState,
     FabricSwitch,
@@ -77,8 +87,10 @@ __all__ = [
     "POLICY_IDS",
     "POLICY_NAMES",
     "RunParams",
+    "EngineOptions",
     "make_params",
     "simulate",
+    "lower",
     "simulate_batch",
     "simulate_telemetry",
     "simulate_batch_telemetry",

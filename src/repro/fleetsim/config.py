@@ -164,8 +164,10 @@ class FleetConfig:
     trace_cap: int = 2 ** 15            # ring-buffer records (flight recorder)
     window_ticks: int = 1_000           # time-series window length (ticks)
     # response-filter backend: "vectorized" (one scatter/tick, default),
-    # "scan" (exact lane-sequential switch_jax.filter semantics), or
-    # "pallas" (kernels.fingerprint_filter — the VMEM-resident kernel)
+    # "scan" (exact lane-sequential switch_jax.filter semantics), "pallas"
+    # (kernels.fingerprint_filter — the VMEM-resident filter kernel), or
+    # "tickfuse" (kernels.tickfuse — StateT + filter fused in ONE kernel,
+    # both tables VMEM-resident; what EngineOptions selects on accelerators)
     filter_backend: str = "vectorized"
     # log-spaced latency histogram (≈6% bin resolution over 1 µs … 2 s)
     hist_bins: int = 256
@@ -183,7 +185,8 @@ class FleetConfig:
             raise ValueError("n_filter_slots must be a power of two")
         if self.n_dedup_slots & (self.n_dedup_slots - 1):
             raise ValueError("n_dedup_slots must be a power of two")
-        if self.filter_backend not in ("vectorized", "scan", "pallas"):
+        if self.filter_backend not in ("vectorized", "scan", "pallas",
+                                       "tickfuse"):
             raise ValueError(f"unknown filter_backend {self.filter_backend!r}")
         if self.arrival not in ("poisson", "trace"):
             raise ValueError(f"unknown arrival kind {self.arrival!r}")

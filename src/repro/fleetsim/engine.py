@@ -203,58 +203,37 @@ def _core_telemetry(cfg: FleetConfig, params: RunParams
     return state.metrics, state.trace, state.series
 
 
-# The compiled programs bake in the registry's branch tables, so the jit
-# cache is additionally keyed on registry.version(): registering a policy
-# after a compile forces a retrace with the grown lax.switch table instead
-# of silently reusing a stale executable.
-@functools.partial(jax.jit, static_argnames=("cfg", "registry_version"))
-def _simulate_jit(cfg: FleetConfig, registry_version: int,
-                  params: RunParams) -> Metrics:
-    return _simulate_core(cfg, params).metrics
+# One jitted entry per execution shape (backend × batch × telemetry ×
+# donation × fused chunk length), built on demand and cached so every
+# caller of the same shape shares one jit cache.  The compiled programs
+# bake in the registry's branch tables, so each entry is additionally
+# keyed on registry.version(): registering a policy after a compile forces
+# a retrace with the grown lax.switch table instead of silently reusing a
+# stale executable.
+@functools.lru_cache(maxsize=None)
+def _entry(backend: str, batch: bool, telemetry: bool, donate: bool,
+           ticks_per_chunk: int):
+    if backend == "fused":
+        from repro.fleetsim.fused import fused_core
 
+        def core(cfg, p):
+            return fused_core(cfg, p, ticks_per_chunk).metrics
+    elif telemetry:
+        # FleetScope: the trace ring + series accumulators ride out of the
+        # program alongside the metrics.  A separate entry, so a
+        # metrics-only caller never pays the telemetry transfer.
+        core = _core_telemetry
+    else:
+        def core(cfg, p):
+            return _simulate_core(cfg, p).metrics
 
-@functools.partial(jax.jit, static_argnames=("cfg", "registry_version"))
-def _simulate_batch_jit(cfg: FleetConfig, registry_version: int,
-                        params: RunParams) -> Metrics:
-    return jax.vmap(lambda p: _simulate_core(cfg, p).metrics)(params)
+    def run(cfg: FleetConfig, registry_version: int, params: RunParams):
+        if batch:
+            return jax.vmap(lambda p: core(cfg, p))(params)
+        return core(cfg, params)
 
-
-# FleetScope variants: same scan, but the trace ring + series accumulators
-# ride out of the program alongside the metrics.  Separate jit entries so a
-# metrics-only caller never pays the telemetry transfer.
-@functools.partial(jax.jit, static_argnames=("cfg", "registry_version"))
-def _simulate_telemetry_jit(cfg: FleetConfig, registry_version: int,
-                            params: RunParams):
-    return _core_telemetry(cfg, params)
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "registry_version"))
-def _simulate_batch_telemetry_jit(cfg: FleetConfig, registry_version: int,
-                                  params: RunParams):
-    return jax.vmap(lambda p: _core_telemetry(cfg, p))(params)
-
-
-def simulate(cfg: FleetConfig, params: RunParams) -> Metrics:
-    """Run one fabric for ``cfg.n_ticks`` ticks; fully jitted."""
-    return _simulate_jit(cfg, registry.version(), params)
-
-
-def simulate_batch(cfg: FleetConfig, params: RunParams) -> Metrics:
-    """vmapped :func:`simulate` — ``params`` fields carry a leading sweep
-    axis; one device program advances every configuration in lock-step."""
-    return _simulate_batch_jit(cfg, registry.version(), params)
-
-
-def lower_run(cfg: FleetConfig, params: RunParams):
-    """``jit(...).lower`` for the single-run entry point (scenario runners
-    report compile time separately from steady-state wall clock)."""
-    return _simulate_jit.lower(cfg, registry.version(), params)
-
-
-def lower_batch(cfg: FleetConfig, params: RunParams):
-    """``jit(...).lower`` for the batch runner (sweeps report compile time
-    separately from steady-state wall clock)."""
-    return _simulate_batch_jit.lower(cfg, registry.version(), params)
+    return jax.jit(run, static_argnames=("cfg", "registry_version"),
+                   donate_argnums=(2,) if donate else ())
 
 
 def _check_telemetry(cfg: FleetConfig) -> None:
@@ -265,26 +244,154 @@ def _check_telemetry(cfg: FleetConfig) -> None:
             "config, or use TelemetrySpec.apply)")
 
 
+def _is_batched(params: RunParams) -> bool:
+    ndim = jnp.ndim(params.policy_id)
+    if ndim > 1:
+        raise ValueError(
+            f"params.policy_id must be scalar (one run) or 1-D (a batched "
+            f"sweep grid); got ndim={ndim}")
+    return ndim == 1
+
+
+def _resolve(cfg: FleetConfig, options):
+    """Normalize ``options`` and resolve the concrete execution path."""
+    from repro.fleetsim.options import EngineOptions
+
+    opts = EngineOptions() if options is None else options
+    if not isinstance(opts, EngineOptions):
+        raise TypeError(f"options must be an EngineOptions, got "
+                        f"{type(opts).__name__}")
+    backend = opts.resolve_backend(cfg)
+    if opts.telemetry:
+        _check_telemetry(cfg)
+    k = 0
+    if backend == "fused":
+        from repro.fleetsim.fused import resolve_chunk
+
+        k = resolve_chunk(cfg, opts.ticks_per_chunk)
+    return opts, backend, k
+
+
+def simulate(cfg: FleetConfig, params: RunParams, *, options=None):
+    """THE FleetSim entry point: run ``params`` on ``cfg``, fully jitted.
+
+    ``params`` with scalar fields runs one fabric; a leading sweep axis
+    runs the whole batch in one vmapped device program.  Everything else
+    is an :class:`~repro.fleetsim.options.EngineOptions`:
+
+    * ``options=None`` / default — staged-or-fused automatically
+      (``backend='auto'``), single device, metrics only; on the default
+      options this is exactly the program the repo always compiled.
+    * ``EngineOptions(backend='fused')`` — the TickFuse backend
+      (:mod:`repro.fleetsim.fused`), bit-identical on non-stage policies.
+    * ``EngineOptions(telemetry=True)`` — returns ``(metrics, trace,
+      series)``; decode with :func:`repro.fleetsim.telemetry.decode_run`.
+      Metrics stay bit-identical — telemetry observes, it never feeds back.
+    * ``EngineOptions(shard=...)`` — lays a *batched* run over a device
+      mesh and returns a :class:`~repro.fleetsim.shard.ShardedMetrics`.
+    * ``EngineOptions(donate=True)`` — donates the ``params`` buffers to
+      the compiled call (the caller's arrays are consumed).
+
+    Returns device :class:`Metrics` (or the telemetry triple / sharded
+    wrapper as selected).  The deprecated ``simulate_batch`` /
+    ``simulate_telemetry`` / ``simulate_batch_telemetry`` /
+    ``simulate_batch_sharded`` names are thin shims over this function —
+    see ``docs/api.md`` for the migration table.
+    """
+    opts, backend, k = _resolve(cfg, options)
+    batched = _is_batched(params)
+    if opts.shard is not None:
+        if not batched:
+            raise ValueError(
+                "EngineOptions.shard lays a sweep grid over a device mesh; "
+                "params must carry a leading sweep axis (got scalar "
+                "RunParams)")
+        from repro.fleetsim.shard import run_sharded
+
+        return run_sharded(cfg, params, opts.shard, backend=backend,
+                           ticks_per_chunk=k)
+    entry = _entry(backend, batched, opts.telemetry, opts.donate, k)
+    return entry(cfg, registry.version(), params)
+
+
+def lower(cfg: FleetConfig, params: RunParams, *, options=None):
+    """``jit(...).lower`` for :func:`simulate` (any single-device execution
+    shape) — sweep harnesses report compile time separately from
+    steady-state wall clock.  Sharded lowering lives in
+    :func:`repro.fleetsim.shard.lower_sharded` (it needs the padded grid
+    plan, not just params)."""
+    opts, backend, k = _resolve(cfg, options)
+    if opts.shard is not None:
+        raise ValueError("lower() is single-device; build a GridPlan and "
+                         "use repro.fleetsim.shard.lower_sharded")
+    entry = _entry(backend, _is_batched(params), opts.telemetry,
+                   opts.donate, k)
+    return entry.lower(cfg, registry.version(), params)
+
+
+def lower_run(cfg: FleetConfig, params: RunParams):
+    """``jit(...).lower`` for a single staged run (scenario runners)."""
+    return _entry("staged", False, False, False, 0).lower(
+        cfg, registry.version(), params)
+
+
+def lower_batch(cfg: FleetConfig, params: RunParams):
+    """``jit(...).lower`` for the staged batch runner."""
+    return _entry("staged", True, False, False, 0).lower(
+        cfg, registry.version(), params)
+
+
+def lower_batch_telemetry(cfg: FleetConfig, params: RunParams):
+    """``jit(...).lower`` for the staged telemetry batch runner."""
+    _check_telemetry(cfg)
+    return _entry("staged", True, True, False, 0).lower(
+        cfg, registry.version(), params)
+
+
+# ------------------------------------------------------- deprecated shims --
+# The five-way entry-point split (simulate / simulate_batch /
+# simulate_telemetry / simulate_batch_telemetry / simulate_batch_sharded)
+# collapsed into simulate(cfg, params, options=EngineOptions(...)).  The old
+# names keep working — pinned to backend='staged', so their programs and
+# results are exactly what they always were — but warn; internal callsites
+# are ruff-gated off them (TID251, pyproject.toml).  docs/api.md carries
+# the migration table and removal schedule.
+def _warn_deprecated(old: str, new: str) -> None:
+    import warnings
+
+    warnings.warn(f"repro.fleetsim.{old} is deprecated; use {new}",
+                  DeprecationWarning, stacklevel=3)
+
+
+def simulate_batch(cfg: FleetConfig, params: RunParams) -> Metrics:
+    """Deprecated: ``simulate`` infers the batch from the params axis."""
+    _warn_deprecated("simulate_batch(cfg, params)",
+                     "simulate(cfg, params) — the leading sweep axis "
+                     "selects the batched program")
+    return _entry("staged", True, False, False, 0)(
+        cfg, registry.version(), params)
+
+
 def simulate_telemetry(cfg: FleetConfig, params: RunParams
                        ) -> tuple[Metrics, TraceBuffer, SeriesState]:
-    """One run with FleetScope on: ``(metrics, trace, series)``.  The
-    metrics are bit-identical to :func:`simulate` on the telemetry-off
-    config — telemetry observes, it never feeds back.  Decode the state
-    pair with :func:`repro.fleetsim.telemetry.decode_run`."""
+    """Deprecated: use ``simulate(..., options=EngineOptions(
+    telemetry=True))``; returns the same ``(metrics, trace, series)``."""
+    _warn_deprecated("simulate_telemetry(cfg, params)",
+                     "simulate(cfg, params, options="
+                     "EngineOptions(telemetry=True))")
     _check_telemetry(cfg)
-    return _simulate_telemetry_jit(cfg, registry.version(), params)
+    return _entry("staged", False, True, False, 0)(
+        cfg, registry.version(), params)
 
 
 def simulate_batch_telemetry(cfg: FleetConfig, params: RunParams
                              ) -> tuple[Metrics, TraceBuffer, SeriesState]:
-    """vmapped :func:`simulate_telemetry` — every output carries the leading
-    sweep axis; index one row out before decoding."""
+    """Deprecated: use ``simulate(..., options=EngineOptions(
+    telemetry=True))`` with batched params."""
+    _warn_deprecated("simulate_batch_telemetry(cfg, params)",
+                     "simulate(cfg, params, options="
+                     "EngineOptions(telemetry=True)) — the leading sweep "
+                     "axis selects the batched program")
     _check_telemetry(cfg)
-    return _simulate_batch_telemetry_jit(cfg, registry.version(), params)
-
-
-def lower_batch_telemetry(cfg: FleetConfig, params: RunParams):
-    """``jit(...).lower`` for the telemetry batch runner."""
-    _check_telemetry(cfg)
-    return _simulate_batch_telemetry_jit.lower(cfg, registry.version(),
-                                               params)
+    return _entry("staged", True, True, False, 0)(
+        cfg, registry.version(), params)

@@ -1,7 +1,8 @@
 """ShardSweep: the sweep grid axis laid out over a device mesh.
 
-``simulate_batch`` vmaps a whole policy × load × seed (× hedge-delay) grid
-onto *one* device.  This module is the multi-device execution path: the same
+The unsharded engine vmaps a whole policy × load × seed (× hedge-delay)
+grid onto *one* device.  This module is the multi-device execution path —
+``simulate(cfg, params, options=EngineOptions(shard=...))`` — the same
 grid is laid out on a 1-D :class:`jax.sharding.Mesh` (axis ``'grid'``) and
 run under ``shard_map``, so each device owns a **contiguous slab of
 configurations** and advances it with the exact per-configuration program
@@ -21,11 +22,11 @@ Three pieces make that honest:
   ``jax.lax.psum`` over the mesh axis (XLA lowers this to a tree/ring
   all-reduce), so the grid-aggregate latency distribution never takes the
   ``grid × racks × bins`` host-gather detour;
-* **an honest single-device fallback** — ``shard=None`` routes to
-  :func:`repro.fleetsim.engine.simulate_batch` untouched, compiling the
-  exact program the repo always compiled (golden-tested), and a 1-device
-  :class:`ShardSpec` still exercises the real ``shard_map`` path so CPU CI
-  covers it without forced devices.
+* **an honest single-device fallback** — ``shard=None`` routes to the
+  unsharded batch engine untouched, compiling the exact program the repo
+  always compiled (golden-tested), and a 1-device :class:`ShardSpec` still
+  exercises the real ``shard_map`` path so CPU CI covers it without forced
+  devices.
 
 The multi-device program is testable anywhere: ``XLA_FLAGS=
 --xla_force_host_platform_device_count=N`` splits a CPU host into N
@@ -61,7 +62,7 @@ except ImportError:  # newer jax: the public API, check_rep → check_vma
     _SHARD_MAP_KW = {"check_vma": False}
 
 from repro.fleetsim.config import FleetConfig
-from repro.fleetsim.engine import RunParams, _simulate_core, simulate_batch
+from repro.fleetsim.engine import RunParams, _entry, _simulate_core
 from repro.fleetsim.state import Metrics
 from repro.scenarios import registry
 
@@ -196,19 +197,30 @@ def plan_grid(params: RunParams, spec: ShardSpec) -> GridPlan:
 
 
 # ---------------------------------------------------------------- runner ----
-# Like engine._simulate_batch_jit, the cache is keyed on registry.version()
+# Like engine._entry's programs, the cache is keyed on registry.version()
 # (post-compile policy registrations must retrace the grown switch tables)
-# and additionally on the mesh, so layout changes get their own executable.
+# and additionally on the mesh + backend, so layout and backend changes
+# each get their own executable.
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "registry_version", "mesh"))
+                   static_argnames=("cfg", "registry_version", "mesh",
+                                    "backend", "ticks_per_chunk"))
 def _simulate_sharded_jit(cfg: FleetConfig, registry_version: int,
-                          mesh: Mesh, params: RunParams, mask: jax.Array):
+                          mesh: Mesh, params: RunParams, mask: jax.Array,
+                          backend: str = "staged", ticks_per_chunk: int = 0):
     axis = mesh.axis_names[0]
+    if backend == "fused":
+        from repro.fleetsim.fused import fused_core
+
+        def core(q):
+            return fused_core(cfg, q, ticks_per_chunk).metrics
+    else:
+        def core(q):
+            return _simulate_core(cfg, q).metrics
 
     def slab(p: RunParams, m: jax.Array):
         # each device advances its contiguous slab with the per-config
         # program of the unsharded engine — no cross-device traffic …
-        met = jax.vmap(lambda q: _simulate_core(cfg, q).metrics)(p)
+        met = jax.vmap(core)(p)
         # … except the histogram merge: mask out padding, reduce the slab
         # locally, then one psum (tree/ring all-reduce) across the mesh
         keep = m.astype(met.hist.dtype)
@@ -224,29 +236,61 @@ def _simulate_sharded_jit(cfg: FleetConfig, registry_version: int,
                       **_SHARD_MAP_KW)(params, mask)
 
 
-def lower_sharded(cfg: FleetConfig, plan: GridPlan):
+def lower_sharded(cfg: FleetConfig, plan: GridPlan,
+                  backend: str = "staged", ticks_per_chunk: int = 0):
     """``jit(...).lower`` for the sharded runner (sweeps report compile
-    time separately from steady-state wall clock, like ``lower_batch``)."""
+    time separately from steady-state wall clock, like ``engine.lower``)."""
     return _simulate_sharded_jit.lower(cfg, registry.version(), plan.mesh,
-                                       plan.params, plan.mask)
+                                       plan.params, plan.mask,
+                                       backend=backend,
+                                       ticks_per_chunk=ticks_per_chunk)
 
 
 def _strip_pad(plan: GridPlan, metrics: Metrics) -> Metrics:
     return jax.tree.map(lambda a: a[:plan.n_grid], metrics)
 
 
+def run_sharded(cfg: FleetConfig, params: RunParams, spec: ShardSpec, *,
+                backend: str = "staged",
+                ticks_per_chunk: int = 0) -> ShardedMetrics:
+    """The mesh-sharded execution path behind ``simulate(..., options=
+    EngineOptions(shard=...))``.
+
+    Pads the grid onto ``spec``'s mesh and runs the ``shard_map`` program
+    on the selected backend; per-configuration results are
+    bitwise-identical to the unsharded run (enforced by
+    ``validate.shard_equivalence`` and ``tests/test_fleetsim_shard.py``).
+    """
+    if cfg.telemetry:
+        raise ValueError(
+            "telemetry is not supported on the sharded runner (the trace "
+            "ring would be sharded too and its per-device rings cannot be "
+            "merged into one chronological stream); run the traced config "
+            "unsharded, or drop cfg.telemetry for the sharded sweep")
+    plan = plan_grid(params, spec)
+    met, grid_hist = _simulate_sharded_jit(cfg, registry.version(),
+                                           plan.mesh, plan.params, plan.mask,
+                                           backend=backend,
+                                           ticks_per_chunk=ticks_per_chunk)
+    return ShardedMetrics(metrics=_strip_pad(plan, met), grid_hist=grid_hist)
+
+
 def simulate_batch_sharded(cfg: FleetConfig, params: RunParams,
                            shard=None) -> ShardedMetrics:
-    """Mesh-sharded :func:`repro.fleetsim.engine.simulate_batch`.
+    """Deprecated: use ``simulate(cfg, params, options=EngineOptions(
+    shard=...))``.
 
-    ``shard=None`` is the honest fallback: it calls ``simulate_batch``
-    itself — the exact current single-device program — and computes the
-    aggregate histogram from its output.  Any other ``shard`` (device
-    count, ``ShardSpec``) pads the grid onto the mesh and runs the
-    ``shard_map`` program; per-configuration results are bitwise-identical
-    to the unsharded run (enforced by ``validate.shard_equivalence`` and
-    ``tests/test_fleetsim_shard.py``).
+    Behavior is unchanged: ``shard=None`` is the honest single-device
+    fallback (the exact staged batch program, aggregate histogram computed
+    from its output); any other ``shard`` runs :func:`run_sharded` on the
+    staged backend.
     """
+    import warnings
+
+    warnings.warn(
+        "repro.fleetsim.simulate_batch_sharded(cfg, params, shard) is "
+        "deprecated; use simulate(cfg, params, options="
+        "EngineOptions(shard=shard))", DeprecationWarning, stacklevel=2)
     spec = as_shard(shard)
     if cfg.telemetry and spec is not None:
         raise ValueError(
@@ -255,9 +299,7 @@ def simulate_batch_sharded(cfg: FleetConfig, params: RunParams,
             "merged into one chronological stream); run the traced config "
             "unsharded, or drop cfg.telemetry for the sharded sweep")
     if spec is None:
-        met = simulate_batch(cfg, params)
+        met = _entry("staged", True, False, False, 0)(
+            cfg, registry.version(), params)
         return ShardedMetrics(metrics=met, grid_hist=met.hist.sum(axis=0))
-    plan = plan_grid(params, spec)
-    met, grid_hist = _simulate_sharded_jit(cfg, registry.version(),
-                                           plan.mesh, plan.params, plan.mask)
-    return ShardedMetrics(metrics=_strip_pad(plan, met), grid_hist=grid_hist)
+    return run_sharded(cfg, params, spec)

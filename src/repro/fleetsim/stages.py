@@ -884,12 +884,21 @@ def _filter_responses(cfg, server_state, tables, rid, idx, clo, sid, qlen,
         new_st, res = filter_tick_vectorized(st, rid, idx, clo, sid, qlen,
                                              active)
         return new_st.server_state, new_st.filter_tables, res.drop
-    # scan / pallas: update server state via a masked scatter, then run the
-    # table update with inactive lanes neutralised (CLO=0 never touches it)
+    # scan / pallas / tickfuse: inactive lanes neutralised up front (CLO=0
+    # never touches the filter; an out-of-range sid never touches StateT)
     sid_m = jnp.where(active, sid, jnp.int32(server_state.shape[0]))
+    clo_m = jnp.where(active, clo, 0).astype(jnp.int32)
+    if cfg.filter_backend == "tickfuse":
+        # the fused megakernel: StateT write + fingerprint filter in one
+        # launch, both tables resident (TickFuse, kernels/tickfuse.py)
+        from repro.kernels.ops import tickfuse_response_path
+
+        return tickfuse_response_path(
+            server_state, tables, rid.astype(jnp.int32),
+            idx.astype(jnp.int32), clo_m, sid_m, qlen.astype(jnp.int32))
+    # scan / pallas: StateT via a masked scatter, then the table update
     server_state = server_state.at[sid_m].set(
         qlen.astype(jnp.int32), mode="drop")
-    clo_m = jnp.where(active, clo, 0).astype(jnp.int32)
     if cfg.filter_backend == "scan":
         tables, drop = jax.lax.scan(
             _filter_step, tables,

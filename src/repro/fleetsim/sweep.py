@@ -25,10 +25,10 @@ from repro.fleetsim.engine import (
     RunParams,
     check_fabric_arrays,
     check_hedge_delay,
-    lower_batch,
-    lower_batch_telemetry,
+    lower,
 )
 from repro.fleetsim.metrics import FleetResult, summarize
+from repro.fleetsim.options import EngineOptions
 from repro.fleetsim.shard import (
     ShardSpec,
     as_shard,
@@ -52,6 +52,9 @@ class SweepResult:
     n_devices: int = 1
     shard: ShardSpec | None = None
     n_pad: int = 0                   # grid rows added to divide the mesh
+    # the concrete engine backend the sweep compiled ('staged' | 'fused')
+    # — perf baselines key on it (tools/check_perf_trend.py)
+    backend: str = "staged"
     # grid-aggregate latency histogram (n_racks, hist_bins), merged
     # device-locally + tree-reduced on the mesh (shard.ShardedMetrics)
     grid_hist: np.ndarray | None = field(default=None, repr=False)
@@ -138,6 +141,7 @@ def sweep_grid(
     resize_arrival_lanes: bool = True,
     hedge_delays: list[float] | None = None,
     shard: ShardSpec | int | None = None,
+    engine: EngineOptions | None = None,
     **cfg_kw,
 ) -> SweepResult:
     """Run every (policy, load, seed[, hedge delay]) combination in one
@@ -163,7 +167,10 @@ def sweep_grid(
     running per-delay duplicates.  ``shard`` (``None`` | device count |
     ``ShardSpec``)
     spreads the grid over a device mesh via :mod:`repro.fleetsim.shard`;
-    ``None`` compiles the exact single-device program.
+    ``None`` compiles the exact single-device program.  ``engine``
+    (:class:`~repro.fleetsim.options.EngineOptions`) selects the execution
+    backend — staged or fused (TickFuse) — and may carry the shard layout
+    itself; passing a shard both ways is an error.
 
     Returns host-side results plus wall-clock accounting (compile time
     reported separately so sweep cost is judged on the steady-state
@@ -228,17 +235,27 @@ def sweep_grid(
     )
     params = jax.tree.map(lambda a: jax.numpy.asarray(a), params)
 
+    opts = engine if engine is not None else EngineOptions()
     shard_spec = as_shard(shard)
+    if shard_spec is not None and opts.shard is not None:
+        raise ValueError("pass the shard layout once: either shard= or "
+                         "engine=EngineOptions(shard=...), not both")
+    shard_spec = shard_spec if shard_spec is not None else opts.shard
     if cfg.telemetry and shard_spec is not None:
         raise ValueError(
             "telemetry sweeps cannot shard (per-device trace rings have no "
             "merged chronological order); drop shard= or cfg.telemetry")
+    # resolve the backend against the *stage-complete* cfg: an explicit
+    # fused request fails here with the options-layer error when the
+    # policy set compiled in a staged-only stage; 'auto' falls back
+    backend = opts.resolve_backend(cfg)
     tel_state = None
     t0 = time.perf_counter()
     if shard_spec is None:
-        lowered = lower_batch_telemetry(cfg, params) if cfg.telemetry \
-            else lower_batch(cfg, params)
-        compiled = lowered.compile()
+        run_opts = EngineOptions(backend=backend,
+                                 telemetry=cfg.telemetry,
+                                 ticks_per_chunk=opts.ticks_per_chunk)
+        compiled = lower(cfg, params, options=run_opts).compile()
         t_compile = time.perf_counter() - t0
         t0 = time.perf_counter()
         if cfg.telemetry:
@@ -250,7 +267,9 @@ def sweep_grid(
         n_devices, n_pad, grid_hist = 1, 0, None
     else:
         plan = plan_grid(params, shard_spec)
-        compiled = lower_sharded(cfg, plan).compile()
+        compiled = lower_sharded(cfg, plan, backend=backend,
+                                 ticks_per_chunk=opts.ticks_per_chunk
+                                 ).compile()
         t_compile = time.perf_counter() - t0
         t0 = time.perf_counter()
         metrics, grid_hist = jax.block_until_ready(
@@ -292,6 +311,7 @@ def sweep_grid(
         n_devices=n_devices,
         shard=shard_spec,
         n_pad=n_pad,
+        backend=backend,
         grid_hist=grid_hist,
         telemetry=telemetry,
         cost_flops=cost_flops,

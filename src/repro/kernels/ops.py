@@ -17,6 +17,7 @@ from repro.kernels.fingerprint_filter import fingerprint_filter as _fingerprint_
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.lru_scan import lru_scan as _lru_scan
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+from repro.kernels.tickfuse import tickfuse_response_path as _tickfuse
 
 
 def _on_tpu() -> bool:
@@ -43,6 +44,17 @@ def fingerprint_filter(tables, req_id, idx, clo, *, impl: str = "auto",
         impl = "pallas"  # the data-structure kernel runs fine interpreted
     return _fingerprint_filter(tables, req_id, idx, clo, block=block,
                                interpret=not _on_tpu())
+
+
+def tickfuse_response_path(server_state, tables, req_id, idx, clo, sid, qlen,
+                           *, impl: str = "auto", block: int = 128):
+    """Fused FleetSim switch response path (StateT write + fingerprint
+    filter, both VMEM-resident); returns (new_server_state, new_tables,
+    drop_mask)."""
+    if impl == "auto":
+        impl = "pallas"  # the data-structure kernel runs fine interpreted
+    return _tickfuse(server_state, tables, req_id, idx, clo, sid, qlen,
+                     block=block, interpret=not _on_tpu())
 
 
 def ssd_scan(x, a, b_mat, c_mat, h0=None, *, impl: str = "auto",

@@ -1,0 +1,143 @@
+"""Pallas TPU kernel: the fused FleetSim switch response path (TickFuse).
+
+One tick's switch response path is two state updates over two resident
+tables — the per-server StateT write (piggybacked queue length) and the
+fingerprint-filter lookup/insert (paper §3.5) — which the staged engine
+issues as a masked XLA scatter followed by a separate
+``kernels.fingerprint_filter`` launch.  This kernel fuses them: **both**
+switch tables live in VMEM for the duration of the launch (whole-array
+blocks, aliased in/out), and one sequential pass over the response lanes
+performs the StateT write and the filter decision per lane — exactly the
+order a response traverses the real switch pipeline.
+
+Semantics are *sequential in lane order*, identical to
+``repro.core.switch_jax._filter_step``: two responses of the same request in
+one batch must see each other's table writes (the second is the redundant
+one and gets dropped), which is why the body is a ``fori_loop`` rather than
+a vectorized scatter.
+
+Memory budget: ``server_state`` is ``n_racks·S × 4 B`` and the table stack
+``(n_racks+1)·n_tables × n_slots × 4 B`` — the default fabric is ~24 KB
+total, and even a 64-rack pod with the prototype's 2×2¹⁷-slot tables fits a
+v5e core's VMEM with room for the lane block.  On CPU the kernel runs in
+``interpret`` mode (bit-exact semantics, Python speed) — the fused engine
+backend only selects it where it is native (see
+``repro.fleetsim.options.EngineOptions``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_HASH_MULT = 2654435761
+
+
+def _tickfuse_kernel(rid_ref, idx_ref, clo_ref, sid_ref, qlen_ref,
+                     sstate_in_ref, tables_in_ref,
+                     sstate_ref, tables_ref, drop_ref):
+    """One grid step: a block of response lanes, sequentially.
+
+    ``sstate_ref`` / ``tables_ref`` (the outputs) are aliased onto their
+    input refs — every read and write goes through the output refs so
+    successive lanes (and grid steps) observe each other's updates, exactly
+    like the switch's register arrays."""
+    del sstate_in_ref, tables_in_ref  # aliased with the output refs
+    n_slots = tables_ref.shape[1]
+    n_servers = sstate_ref.shape[0]
+    block = rid_ref.shape[0]
+
+    def body(i, _):
+        rid = rid_ref[i]
+        idx = idx_ref[i]
+        clo = clo_ref[i]
+        sid = sid_ref[i]
+        # inactive lanes ride in pre-neutralised: sid == n_servers (dropped
+        # below) and clo == 0 (never touches the filter tables)
+
+        # -- StateT: the response piggybacks its server's queue length ----
+        @pl.when(sid < n_servers)
+        def _():
+            sstate_ref[sid] = qlen_ref[i]
+
+        # -- FilterT: multiplicative fingerprint hash (repro.core.tables) -
+        x = (rid.astype(jnp.uint32) * jnp.uint32(_HASH_MULT)) >> jnp.uint32(15)
+        slot = (x % jnp.uint32(n_slots)).astype(jnp.int32)
+        occupant = tables_ref[idx, slot]
+        hit = (clo > 0) & (occupant == rid)
+        # hit  → clear the slot and drop the (slower) response
+        # miss → insert/overwrite the fingerprint and forward
+        new_val = jnp.where(hit, jnp.int32(0), rid)
+
+        @pl.when(clo > 0)
+        def _():
+            tables_ref[idx, slot] = new_val
+
+        drop_ref[i] = hit.astype(jnp.int32)
+        return 0
+
+    jax.lax.fori_loop(0, block, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def tickfuse_response_path(
+    server_state: jax.Array,  # (n_servers,) int32 — flat StateT (resident)
+    tables: jax.Array,        # (n_tables, n_slots) int32 — FilterT (resident)
+    req_id: jax.Array,        # (B,) int32
+    idx: jax.Array,           # (B,) int32 — pre-offset filter-table index
+    clo: jax.Array,           # (B,) int32 — CLO field (0 → pass-through)
+    sid: jax.Array,           # (B,) int32 — responding server (n_servers →
+                              # inactive lane, StateT untouched)
+    qlen: jax.Array,          # (B,) int32 — piggybacked queue length
+    *,
+    block: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns ``(new_server_state, new_tables, drop)`` with exact
+    lane-sequential switch semantics (StateT write, then filter, per lane).
+
+    Inactive lanes must arrive neutralised — ``sid == n_servers`` and
+    ``clo == 0`` — the same convention the staged ``_filter_responses``
+    scatter path uses; padding added here follows it."""
+    b = req_id.shape[0]
+    if b % block != 0:
+        pad = block - b % block
+        req_id = jnp.pad(req_id, (0, pad))
+        idx = jnp.pad(idx, (0, pad))
+        clo = jnp.pad(clo, (0, pad))              # CLO=0: filter untouched
+        sid = jnp.pad(sid, (0, pad),
+                      constant_values=server_state.shape[0])  # StateT too
+        qlen = jnp.pad(qlen, (0, pad))
+    bp = req_id.shape[0]
+    grid = (bp // block,)
+
+    new_sstate, new_tables, drop = pl.pallas_call(
+        _tickfuse_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),            # req_id
+            pl.BlockSpec((block,), lambda i: (i,)),            # idx
+            pl.BlockSpec((block,), lambda i: (i,)),            # clo
+            pl.BlockSpec((block,), lambda i: (i,)),            # sid
+            pl.BlockSpec((block,), lambda i: (i,)),            # qlen
+            pl.BlockSpec(server_state.shape, lambda i: (0,)),  # StateT (whole)
+            pl.BlockSpec(tables.shape, lambda i: (0, 0)),      # FilterT (whole)
+        ],
+        out_specs=[
+            pl.BlockSpec(server_state.shape, lambda i: (0,)),  # StateT out
+            pl.BlockSpec(tables.shape, lambda i: (0, 0)),      # FilterT out
+            pl.BlockSpec((block,), lambda i: (i,)),            # drop
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(server_state.shape, server_state.dtype),
+            jax.ShapeDtypeStruct(tables.shape, tables.dtype),
+            jax.ShapeDtypeStruct((bp,), jnp.int32),
+        ],
+        input_output_aliases={5: 0, 6: 1},
+        interpret=interpret,
+    )(req_id.astype(jnp.int32), idx.astype(jnp.int32), clo.astype(jnp.int32),
+      sid.astype(jnp.int32), qlen.astype(jnp.int32), server_state, tables)
+    return new_sstate, new_tables, drop[:b].astype(bool)

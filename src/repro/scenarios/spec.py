@@ -31,8 +31,9 @@ import numpy as np
 
 from repro.core.workloads import load_to_rate, rate_to_load
 from repro.fleetsim.config import FleetConfig
-from repro.fleetsim.engine import make_params, simulate, simulate_telemetry
+from repro.fleetsim.engine import make_params, simulate
 from repro.fleetsim.metrics import FleetResult, summarize
+from repro.fleetsim.options import EngineOptions
 from repro.fleetsim.shard import ShardSpec
 from repro.fleetsim.sweep import SweepResult, rack_skew, sweep_grid
 from repro.fleetsim.telemetry import RunTelemetry, TelemetrySpec, decode_run
@@ -79,6 +80,10 @@ class Scenario:
     # FleetScope observability (repro.fleetsim.telemetry): None runs the
     # exact telemetry-off program; a spec compiles the trace/series stages in
     telemetry: TelemetrySpec | None = None
+    # engine execution options (repro.fleetsim.options): None runs the
+    # default ('auto' backend — staged, or fused where native); pinned
+    # options ride the JSON so a file reproduces its exact execution path
+    engine: EngineOptions | None = None
 
     # ------------------------------------------------------------ derived --
     @property
@@ -146,7 +151,8 @@ class Scenario:
     def fleet_metrics(self, **cfg_overrides):
         """Run the array engine; returns ``(cfg, raw device Metrics)``."""
         cfg = self.fleet_config(**cfg_overrides)
-        m = jax.block_until_ready(simulate(cfg, self.run_params(cfg)))
+        m = jax.block_until_ready(
+            simulate(cfg, self.run_params(cfg), options=self.engine))
         return cfg, m
 
     def run_fleetsim(self, **cfg_overrides) -> FleetResult:
@@ -167,8 +173,10 @@ class Scenario:
         sc = self if self.telemetry is not None and self.telemetry.enabled \
             else replace(self, telemetry=TelemetrySpec())
         cfg = sc.fleet_config(**cfg_overrides)
+        opts = replace(self.engine or EngineOptions(),
+                       telemetry=True, shard=None)
         m, trace, series = jax.block_until_ready(
-            simulate_telemetry(cfg, sc.run_params(cfg)))
+            simulate(cfg, sc.run_params(cfg), options=opts))
         m, trace, series = jax.device_get((m, trace, series))
         result = summarize(cfg, m, policy=self.policy,
                            load=self.effective_load(cfg.n_ticks),
@@ -227,13 +235,15 @@ class Scenario:
             d["max_arrivals"] = self.max_arrivals
         if self.telemetry is not None:
             d["telemetry"] = self.telemetry.to_json()
+        if self.engine is not None:
+            d["engine"] = self.engine.to_json()
         return d
 
     _JSON_KEYS = ("name", "policy", "load", "seed", "racks", "servers",
                   "workers", "n_ticks", "hot_rack_weight",
                   "straggler_rack_mult", "queue_cap", "max_arrivals",
                   "service", "arrival", "slowdown", "fail_window_ticks",
-                  "telemetry")
+                  "telemetry", "engine")
 
     @classmethod
     def from_json(cls, d: dict) -> "Scenario":
@@ -245,7 +255,8 @@ class Scenario:
                              f"valid: {sorted(cls._JSON_KEYS)}")
         kw = {k: d[k] for k in cls._JSON_KEYS
               if k in d and k not in ("service", "arrival", "slowdown",
-                                      "fail_window_ticks", "telemetry")}
+                                      "fail_window_ticks", "telemetry",
+                                      "engine")}
         if "service" in d:
             kw["service"] = ServiceSpec.from_json(d["service"])
         kw["arrival"] = arrival_from_json(d.get("arrival"))
@@ -255,6 +266,8 @@ class Scenario:
             kw["fail_window_ticks"] = tuple(d["fail_window_ticks"])
         if d.get("telemetry") is not None:
             kw["telemetry"] = TelemetrySpec.from_json(d["telemetry"])
+        if d.get("engine") is not None:
+            kw["engine"] = EngineOptions.from_json(d["engine"])
         return cls(**kw)
 
     def to_file(self, path) -> Path:
@@ -289,6 +302,10 @@ class SweepSpec:
     seeds: tuple[int, ...] = (0,)
     hedge_delays: tuple[float, ...] = ()
     shard: ShardSpec | None = None
+    # engine execution options for the whole grid (backend, chunking);
+    # None runs the default 'auto' backend.  The shard layout stays in
+    # ``shard`` — an engine sub-object carrying one too is rejected.
+    engine: EngineOptions | None = None
 
     def resolved_policies(self) -> list[str]:
         if self.policies == "registered":
@@ -330,7 +347,7 @@ class SweepSpec:
                               fail_window_ticks=base.fail_window_ticks,
                               resize_arrival_lanes=not pinned,
                               hedge_delays=list(self.hedge_delays) or None,
-                              shard=self.shard)
+                              shard=self.shard, engine=self.engine)
         if self.shard is not None or self.hedge_delays:
             raise ValueError("shard / hedge_delays are Poisson-grid "
                              "features (one vmapped program); trace "
@@ -353,10 +370,12 @@ class SweepSpec:
             d["hedge_delays"] = list(self.hedge_delays)
         if self.shard is not None:
             d["shard"] = self.shard.to_json()
+        if self.engine is not None:
+            d["engine"] = self.engine.to_json()
         return d
 
     _JSON_KEYS = ("base", "policies", "loads", "seeds", "hedge_delays",
-                  "shard")
+                  "shard", "engine")
 
     @classmethod
     def from_json(cls, d: dict) -> "SweepSpec":
@@ -366,12 +385,14 @@ class SweepSpec:
                              f"valid: {sorted(cls._JSON_KEYS)}")
         pol = d.get("policies", "registered")
         shard = d.get("shard")
+        eng = d.get("engine")
         return cls(base=Scenario.from_json(d["base"]),
                    policies=pol if isinstance(pol, str) else tuple(pol),
                    loads=tuple(d.get("loads", ())),
                    seeds=tuple(d.get("seeds", (0,))),
                    hedge_delays=tuple(d.get("hedge_delays", ())),
-                   shard=None if shard is None else ShardSpec.from_json(shard))
+                   shard=None if shard is None else ShardSpec.from_json(shard),
+                   engine=None if eng is None else EngineOptions.from_json(eng))
 
     def to_file(self, path) -> Path:
         path = Path(path)
@@ -390,20 +411,24 @@ def run_scenarios(scenarios: list[Scenario], **cfg_overrides) -> SweepResult:
     compilation is timed separately from the steady-state runs (matching
     ``sweep_grid``'s accounting, so MRPS numbers are comparable between
     Poisson grids and trace replays)."""
-    from repro.fleetsim.engine import lower_run
+    from repro.fleetsim.engine import lower
 
     prepared = [(sc, sc.fleet_config(**cfg_overrides)) for sc in scenarios]
     compiled: dict = {}
     compile_s = 0.0
+    # scenarios sharing a (static config, engine options) pair reuse one
+    # compiled program — EngineOptions is frozen/hashable by design
     for sc, cfg in prepared:
-        if cfg not in compiled:
+        key = (cfg, sc.engine)
+        if key not in compiled:
             t0 = time.perf_counter()
-            compiled[cfg] = lower_run(cfg, sc.run_params(cfg)).compile()
+            compiled[key] = lower(cfg, sc.run_params(cfg),
+                                  options=sc.engine).compile()
             compile_s += time.perf_counter() - t0
     results = []
     t0 = time.perf_counter()
     for sc, cfg in prepared:
-        m = jax.block_until_ready(compiled[cfg](sc.run_params(cfg)))
+        m = jax.block_until_ready(compiled[cfg, sc.engine](sc.run_params(cfg)))
         results.append(summarize(
             cfg, jax.device_get(m), policy=sc.policy,
             load=sc.effective_load(cfg.n_ticks),

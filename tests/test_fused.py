@@ -1,0 +1,354 @@
+"""TickFuse (the fused backend) and the redesigned ``simulate`` entry point.
+
+Four contracts from the PR-7 API redesign:
+
+* the fused backend is **bit-identical** to the staged backend on the
+  non-stage policy matrix (baseline / c-clone / netclone / racksched /
+  netclone+racksched), for every rack count, filter backend (including the
+  Pallas TickFuse megakernel in interpret mode), and chunk length — and
+  against the checked-in PR-1 goldens;
+* dtype packing (``pick_count_dtype`` / ``pack_array``) widens or raises,
+  never wraps: an exact integer round-trip for every in-bound value
+  (property-tested);
+* :class:`EngineOptions` is the one knob object — invalid combinations
+  fail at options construction/resolution with clear errors, its JSON form
+  is strict-keyed, and ``'auto'`` falls back to staged where fused cannot
+  run;
+* the deprecated entry points (``simulate_batch`` & co.) warn but return
+  results identical to the unified ``simulate``.
+"""
+
+import json
+import warnings
+from dataclasses import replace
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.workloads import ExponentialService, load_to_rate
+from repro.fleetsim import (
+    POLICY_IDS,
+    EngineOptions,
+    FleetConfig,
+    ServiceSpec,
+    make_params,
+    simulate,
+)
+from repro.fleetsim.fused import (
+    fused_core,
+    pack_array,
+    pack_state,
+    pick_count_dtype,
+    unpack_state,
+)
+from repro.fleetsim.state import init_fleet_state
+
+SVC = ExponentialService(25.0)
+GOLDEN = Path(__file__).parent / "golden" / "fleetsim_single_tor.json"
+
+#: the fused-supported policy matrix (no coordinator / hedge_timer stage)
+FUSED_POLICIES = ("baseline", "c-clone", "netclone", "racksched",
+                  "netclone+racksched")
+
+
+def fused_cfg(n_racks=1, **kw):
+    base = dict(n_racks=n_racks, n_servers=4, n_workers=8, queue_cap=64,
+                max_arrivals=10, n_ticks=900,
+                service=ServiceSpec.exponential(25.0))
+    base.update(kw)
+    return FleetConfig(**base)
+
+
+def run_params(cfg, policy, load=0.5, seed=0, **kw):
+    rate = load_to_rate(load, SVC, cfg.n_servers_total, cfg.n_workers)
+    return make_params(cfg, POLICY_IDS[policy], rate, seed, **kw)
+
+
+def assert_tree_equal(a, b, what=""):
+    for (pa, la), (pb, lb) in zip(
+            jax.tree_util.tree_leaves_with_path(a),
+            jax.tree_util.tree_leaves_with_path(b)):
+        assert np.array_equal(np.asarray(la), np.asarray(lb)), \
+            f"{what}: leaf {jax.tree_util.keystr(pa)} differs"
+
+
+# ------------------------------------------------- fused == staged, bitwise --
+@pytest.mark.parametrize("n_racks", [1, 2])
+@pytest.mark.parametrize("policy", FUSED_POLICIES)
+def test_fused_bit_identical_to_staged(policy, n_racks):
+    """Same ticks, same draws, same bits: the fused backend replays the
+    staged program exactly on the whole non-stage policy matrix."""
+    cfg = fused_cfg(n_racks=n_racks)
+    params = run_params(cfg, policy, load=0.6, seed=3)
+    staged = simulate(cfg, params, options=EngineOptions(backend="staged"))
+    fused = simulate(cfg, params, options=EngineOptions(backend="fused"))
+    assert_tree_equal(staged, fused, f"{policy}/racks={n_racks}")
+
+
+@pytest.mark.parametrize("policy", ["netclone", "netclone+racksched"])
+def test_fused_tickfuse_kernel_bit_identical(policy):
+    """The Pallas TickFuse switch megakernel (interpret mode on CPU) slots
+    into the fused backend with bit-identical results to the vectorized
+    filter path."""
+    cfg = fused_cfg(n_racks=2)
+    params = run_params(cfg, policy, load=0.6, seed=5)
+    staged = simulate(cfg, params, options=EngineOptions(backend="staged"))
+    cfg_tf = replace(cfg, filter_backend="tickfuse")
+    fused = simulate(cfg_tf, params, options=EngineOptions(backend="fused"))
+    assert_tree_equal(staged, fused, policy)
+
+
+@pytest.mark.parametrize("k", [1, 7, 256, 10_000])
+def test_fused_chunk_length_invariant(k):
+    """K only moves the pack points: every chunk length (including a prime
+    with a tail remainder and one clipped to n_ticks) is bit-identical."""
+    cfg = fused_cfg(n_racks=2)
+    params = run_params(cfg, "netclone", load=0.7, seed=1)
+    ref = simulate(cfg, params, options=EngineOptions(backend="staged"))
+    out = simulate(cfg, params,
+                   options=EngineOptions(backend="fused", ticks_per_chunk=k))
+    assert_tree_equal(ref, out, f"K={k}")
+
+
+def test_fused_bit_identical_to_golden():
+    """The fused backend reproduces the PR-1 single-ToR goldens bit for bit
+    (every checked-in case is a non-stage policy)."""
+    g = json.loads(GOLDEN.read_text())
+    cfg = FleetConfig(service=ServiceSpec.exponential(25.0), **g["cfg"])
+    for c in g["cases"]:
+        rate = load_to_rate(c["load"], SVC, cfg.n_servers, cfg.n_workers)
+        kw = {}
+        if "slowdown" in c:
+            kw["slowdown"] = np.asarray(c["slowdown"], np.float32)
+        if "fail_window" in c:
+            kw["fail_window"] = tuple(c["fail_window"])
+        params = make_params(cfg, POLICY_IDS[c["policy"]], rate, c["seed"],
+                             **kw)
+        m = simulate(cfg, params,
+                     options=EngineOptions(backend="fused",
+                                           ticks_per_chunk=300))
+        for field, want in c["metrics"].items():
+            got = np.asarray(getattr(m, field)).reshape(-1)
+            assert np.array_equal(got, np.asarray(want).reshape(-1)), \
+                (c["policy"], field)
+
+
+def test_fused_core_rejects_staged_only_stages():
+    cfg = fused_cfg(coordinator=True)
+    params = run_params(cfg, "laedge")
+    with pytest.raises(ValueError, match="staged"):
+        fused_core(cfg, params)
+
+
+# --------------------------------------------------------- dtype packing ----
+def test_pick_count_dtype_tiers():
+    assert pick_count_dtype(0) == jnp.uint8
+    assert pick_count_dtype(255) == jnp.uint8
+    assert pick_count_dtype(256) == jnp.int16
+    assert pick_count_dtype(32767) == jnp.int16
+    assert pick_count_dtype(32768) == jnp.int32
+    assert pick_count_dtype(2**31 - 1) == jnp.int32
+    with pytest.raises(ValueError, match="wrap"):
+        pick_count_dtype(2**31)
+    with pytest.raises(ValueError, match="non-negative"):
+        pick_count_dtype(-1)
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(min_value=0, max_value=2**33))
+def test_pack_never_wraps(bound):
+    """Raises-or-widens-never-wraps: any bound either gets a dtype that
+    round-trips every value in [0, bound] exactly, or a ValueError."""
+    try:
+        dt = pick_count_dtype(bound)
+    except ValueError:
+        assert bound > 2**31 - 1
+        return
+    assert bound <= jnp.iinfo(dt).max
+    probe = np.unique(np.clip([0, 1, bound // 2, bound - 1, bound],
+                              0, bound)).astype(np.int64)
+    packed = pack_array(jnp.asarray(probe, jnp.int32), bound)
+    assert packed.dtype == dt
+    assert np.array_equal(np.asarray(packed.astype(jnp.int64)), probe)
+
+
+def test_pack_state_round_trip():
+    """pack → unpack restores the exact int32 state, and the packed carry
+    uses narrow dtypes for a small queue_cap."""
+    cfg = fused_cfg(queue_cap=32)
+    state = init_fleet_state(cfg, jax.random.PRNGKey(0))
+    packed = pack_state(cfg, state)
+    assert packed.queues.head.dtype == jnp.uint8
+    assert packed.queues.count.dtype == jnp.uint8
+    assert packed.switch.server_state.dtype == jnp.uint8
+    # REQ_ID carriers stay int32 — a packed req-id would alias requests
+    assert packed.switch.filter_tables.dtype == jnp.int32
+    assert_tree_equal(state, unpack_state(packed), "pack round-trip")
+
+
+# -------------------------------------------------------- EngineOptions -----
+def test_options_validation():
+    with pytest.raises(ValueError, match="unknown backend"):
+        EngineOptions(backend="warp")
+    with pytest.raises(ValueError, match="ticks_per_chunk"):
+        EngineOptions(ticks_per_chunk=-1)
+    with pytest.raises(ValueError, match="sharded runner"):
+        EngineOptions(telemetry=True, shard=2)
+
+
+def test_options_json_round_trip_and_strict_keys():
+    o = EngineOptions(backend="fused", ticks_per_chunk=64)
+    assert EngineOptions.from_json(o.to_json()) == o
+    assert EngineOptions.from_json({}) == EngineOptions()
+    with pytest.raises(ValueError, match="unknown engine keys"):
+        EngineOptions.from_json({"backand": "fused"})
+    with pytest.raises(ValueError, match="unknown engine keys"):
+        # the shard layout lives in the shard sub-object, not in engine
+        EngineOptions.from_json({"backend": "fused", "shard": {}})
+
+
+def test_resolve_backend():
+    plain = fused_cfg()
+    coord = fused_cfg(coordinator=True)
+    assert EngineOptions(backend="staged").resolve_backend(plain) == "staged"
+    assert EngineOptions(backend="fused").resolve_backend(plain) == "fused"
+    # 'auto' falls back for staged-only stages; explicit 'fused' raises
+    assert EngineOptions(backend="auto").resolve_backend(coord) == "staged"
+    with pytest.raises(ValueError, match="coordinator"):
+        EngineOptions(backend="fused").resolve_backend(coord)
+    with pytest.raises(ValueError, match="telemetry"):
+        EngineOptions(backend="fused",
+                      telemetry=True).resolve_backend(plain)
+
+
+def test_simulate_rejects_bad_params_shapes():
+    cfg = fused_cfg()
+    params = run_params(cfg, "netclone")
+    bad = jax.tree.map(lambda a: jnp.stack([jnp.stack([a, a])] * 2), params)
+    with pytest.raises(ValueError, match="scalar .*or 1-D"):
+        simulate(cfg, bad)
+    with pytest.raises(ValueError, match="leading sweep axis"):
+        simulate(cfg, params, options=EngineOptions(shard=1))
+    with pytest.raises(TypeError, match="EngineOptions"):
+        simulate(cfg, params, options="fused")
+
+
+# ---------------------------------------------------- deprecated shims ------
+def _batchify(cfg, policies):
+    return jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *[run_params(cfg, p, seed=i)
+                          for i, p in enumerate(policies)])
+
+
+def test_simulate_batch_shim_warns_and_matches():
+    from repro.fleetsim import simulate_batch
+
+    cfg = fused_cfg()
+    grid = _batchify(cfg, ["baseline", "netclone"])
+    new = simulate(cfg, grid, options=EngineOptions(backend="staged"))
+    with pytest.warns(DeprecationWarning, match="simulate_batch"):
+        old = simulate_batch(cfg, grid)
+    assert_tree_equal(new, old, "simulate_batch shim")
+
+
+def test_telemetry_shims_warn_and_match():
+    from repro.fleetsim import simulate_batch_telemetry, simulate_telemetry
+
+    cfg = fused_cfg(telemetry=True, window_ticks=100)
+    params = run_params(cfg, "netclone")
+    m_new, tr_new, se_new = simulate(
+        cfg, params, options=EngineOptions(telemetry=True))
+    with pytest.warns(DeprecationWarning, match="simulate_telemetry"):
+        m_old, tr_old, se_old = simulate_telemetry(cfg, params)
+    assert_tree_equal((m_new, tr_new, se_new), (m_old, tr_old, se_old),
+                      "simulate_telemetry shim")
+
+    grid = _batchify(cfg, ["netclone", "c-clone"])
+    b_new = simulate(cfg, grid, options=EngineOptions(telemetry=True))
+    with pytest.warns(DeprecationWarning, match="simulate_batch_telemetry"):
+        b_old = simulate_batch_telemetry(cfg, grid)
+    assert_tree_equal(b_new, b_old, "simulate_batch_telemetry shim")
+
+
+def test_sharded_shim_warns_and_matches():
+    from repro.fleetsim import simulate_batch_sharded
+
+    cfg = fused_cfg()
+    grid = _batchify(cfg, ["baseline", "netclone"])
+    new = simulate(cfg, grid, options=EngineOptions(shard=1))
+    with pytest.warns(DeprecationWarning, match="simulate_batch_sharded"):
+        old = simulate_batch_sharded(cfg, grid, shard=1)
+    assert_tree_equal(new, old, "simulate_batch_sharded shim")
+    # the shard=None honest fallback still works (plain batch + host merge)
+    with pytest.warns(DeprecationWarning):
+        fb = simulate_batch_sharded(cfg, grid)
+    assert_tree_equal(new.metrics, fb.metrics, "shard=None fallback")
+    assert np.array_equal(np.asarray(new.grid_hist),
+                          np.asarray(fb.grid_hist))
+
+
+def test_no_warning_on_unified_path(recwarn):
+    """The redesigned entry point itself never raises DeprecationWarning —
+    only the legacy names do."""
+    cfg = fused_cfg()
+    simulate(cfg, run_params(cfg, "netclone"))
+    assert not [w for w in recwarn.list
+                if issubclass(w.category, DeprecationWarning)]
+
+
+# ------------------------------------------------------------ unified misc --
+def test_unified_fused_batch_and_donate():
+    """Batched fused runs (and donated params) match per-run staged."""
+    cfg = fused_cfg(n_racks=2)
+    grid = _batchify(cfg, ["netclone", "racksched", "baseline"])
+    ref = simulate(cfg, grid, options=EngineOptions(backend="staged"))
+    out = simulate(cfg, grid, options=EngineOptions(backend="fused"))
+    assert_tree_equal(ref, out, "fused batch")
+    donated = simulate(cfg, grid,
+                       options=EngineOptions(backend="fused", donate=True))
+    assert_tree_equal(ref, donated, "fused batch, donated params")
+
+
+def test_lower_compiles_every_backend():
+    from repro.fleetsim import lower
+
+    cfg = fused_cfg()
+    params = run_params(cfg, "netclone")
+    for opts in (None, EngineOptions(backend="fused"),
+                 EngineOptions(backend="staged")):
+        compiled = lower(cfg, params, options=opts).compile()
+        m = jax.block_until_ready(compiled(params))
+        assert int(m.n_arrivals) > 0
+    with pytest.raises(ValueError, match="lower_sharded"):
+        lower(cfg, _batchify(cfg, ["baseline"]),
+              options=EngineOptions(shard=1))
+
+
+def test_scenario_engine_sub_object_round_trip():
+    from repro.scenarios import Scenario, SweepSpec
+
+    sc = Scenario(name="t", n_ticks=500,
+                  engine=EngineOptions(backend="fused", ticks_per_chunk=50))
+    sc2 = Scenario.from_json(json.loads(json.dumps(sc.to_json())))
+    assert sc2.engine == sc.engine
+    sp = SweepSpec(base=sc, policies=("baseline",),
+                   engine=EngineOptions(backend="staged"))
+    sp2 = SweepSpec.from_json(json.loads(json.dumps(sp.to_json())))
+    assert sp2.engine == sp.engine
+    with pytest.raises(ValueError, match="unknown scenario keys"):
+        Scenario.from_json({"engine": {"backend": "auto"}, "enginee": {}})
+
+
+def test_sweep_backend_recorded():
+    from repro.fleetsim import sweep_grid
+
+    res = sweep_grid(SVC, ["baseline"], [0.5], [0], n_racks=1, n_ticks=500,
+                     engine=EngineOptions(backend="fused"))
+    assert res.backend == "fused"
+    res2 = sweep_grid(SVC, ["baseline"], [0.5], [0], n_racks=1, n_ticks=500)
+    assert res2.backend == "staged"  # 'auto' on CPU
+    assert [r.row() for r in res.results] == [r.row() for r in res2.results]

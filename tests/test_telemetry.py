@@ -297,3 +297,43 @@ def test_check_perf_trend_pass_fail_and_rebaseline(tmp_path, capsys):
     assert mod.config_ticks_per_s(
         {"n_configs": 10, "n_ticks": 1000, "wall_clock_s": 1.0}) \
         == pytest.approx(10_000.0)
+
+
+def test_check_perf_trend_trajectory_keyed_per_backend(tmp_path, capsys):
+    """A trajectory baseline only judges same-(backend, n_devices) rows: a
+    fused artifact never fails against the staged row, a missing row passes
+    with a notice, and --update-baseline upserts without touching the other
+    backends' rows."""
+    mod = _perf_trend()
+    traj = tmp_path / "traj.json"
+    traj.write_text(json.dumps({"baselines": [
+        {"backend": "staged", "n_devices": 1, "n_configs": 10,
+         "n_ticks": 1000, "wall_clock_s": 1.0},      # 10k ct/s
+    ]}))
+    argv = ["--baseline", str(traj)]
+
+    # fused fresh, no fused row yet: PASS (no baseline), even though it is
+    # far slower than the staged row
+    fused_slow = tmp_path / "fused.json"
+    fused_slow.write_text(json.dumps({"backend": "fused", "n_configs": 10,
+                                      "n_ticks": 1000, "wall_clock_s": 8.0}))
+    assert mod.main(["--fresh", str(fused_slow), *argv]) == 0
+    assert "no baseline" in capsys.readouterr().out
+
+    # upsert the fused row; the staged row survives verbatim
+    assert mod.main(["--fresh", str(fused_slow), "--update-baseline",
+                     *argv]) == 0
+    doc = json.loads(traj.read_text())
+    assert [mod.artifact_key(r) for r in doc["baselines"]] == \
+        [("fused", 1), ("staged", 1)]
+    assert doc["baselines"][1]["wall_clock_s"] == 1.0
+
+    # now a same-key regression fails...
+    fused_slower = tmp_path / "fused2.json"
+    fused_slower.write_text(json.dumps({"backend": "fused", "n_configs": 10,
+                                        "n_ticks": 1000,
+                                        "wall_clock_s": 20.0}))
+    assert mod.main(["--fresh", str(fused_slower), *argv]) == 1
+    # ...while the staged row still judges staged runs independently
+    staged_ok = _artifact(tmp_path / "staged_ok.json", wall=1.1)
+    assert mod.main(["--fresh", str(staged_ok), *argv]) == 0

@@ -1,8 +1,8 @@
 """Perf-trend guard: fail CI when the FleetSim engine gets markedly slower.
 
 Compares a freshly-produced sweep artifact (a CI smoke run of
-``benchmarks.run --engine fleetsim``) against the checked-in reference
-``results/bench/BENCH_fleetsim.json`` on the scale-normalized metric
+``benchmarks.run --engine fleetsim``) against a checked-in reference on the
+scale-normalized metric
 
     config_ticks_per_s = n_configs * n_ticks / wall_clock_s
 
@@ -18,13 +18,31 @@ CI smoke grid against its checked-in smoke-scale twin
         --fresh bench-artifacts/BENCH_fleetsim_shard.json \
         --baseline results/bench/BENCH_fleetsim_shard_smoke.json
 
+Baselines are keyed per ``(backend, n_devices)`` — a staged artifact is only
+judged against a staged baseline and a fused one against a fused baseline
+(the two compile different programs; comparing across them would fail every
+staged CI run the moment a faster backend landed).  Two baseline-file
+formats are accepted:
+
+* a **single sweep artifact** (any ``benchmarks.run --out`` file): usable
+  when its ``(backend, n_devices)`` matches the fresh artifact's;
+* a **trajectory file** (``{"baselines": [...]}`` — the repo-root
+  ``BENCH_fleetsim.json``): one summary row per ``(backend, n_devices)``,
+  and the fresh artifact is matched to its row.
+
+A fresh artifact whose key has no baseline row passes with a notice (a new
+backend has no history to regress against) — add its row with
+``--update-baseline``.
+
 Residual differences (runner hardware, load) are what the
 ``--max-regression`` margin absorbs.
 
 Exit status: 0 when the fresh rate is within the allowed regression of the
-baseline (or faster), 1 on a regression beyond the threshold, 2 on missing /
-malformed artifacts.  ``--update-baseline`` rewrites the reference from the
-fresh artifact instead of checking (for deliberate re-baselining commits).
+matching baseline (or no baseline row matches), 1 on a regression beyond
+the threshold, 2 on missing / malformed artifacts.  ``--update-baseline``
+rewrites the reference from the fresh artifact instead of checking (for
+deliberate re-baselining commits); on a trajectory file it upserts the
+matching row and leaves the other backends' rows untouched.
 """
 
 from __future__ import annotations
@@ -35,8 +53,9 @@ import shutil
 import sys
 from pathlib import Path
 
-DEFAULT_BASELINE = Path(__file__).parent.parent / "results" / "bench" / \
-    "BENCH_fleetsim.json"
+# the repo-root trajectory file: one summary row per (backend, n_devices),
+# seeded from full-scale `benchmarks.run --engine fleetsim --out` runs
+DEFAULT_BASELINE = Path(__file__).parent.parent / "BENCH_fleetsim.json"
 
 
 def config_ticks_per_s(artifact: dict) -> float:
@@ -51,6 +70,37 @@ def config_ticks_per_s(artifact: dict) -> float:
     return n_configs * n_ticks / wall
 
 
+def artifact_key(doc: dict) -> tuple[str, int]:
+    """The baseline key of an artifact/row: ``(backend, n_devices)``.
+    Artifacts predating the backend field are staged single-device runs."""
+    return (str(doc.get("backend", "staged")), int(doc.get("n_devices", 1)))
+
+
+def baseline_entry(doc: dict, key: tuple[str, int]) -> dict | None:
+    """The baseline row matching ``key``, from either format (None if the
+    file carries no comparable row)."""
+    if "baselines" in doc:  # trajectory file: one row per key
+        for row in doc["baselines"]:
+            if artifact_key(row) == key:
+                return row
+        return None
+    return doc if artifact_key(doc) == key else None
+
+
+def summarize_row(artifact: dict, source: str) -> dict:
+    """A trajectory row distilled from a full sweep artifact."""
+    return {
+        "backend": artifact_key(artifact)[0],
+        "n_devices": artifact_key(artifact)[1],
+        "n_configs": artifact["n_configs"],
+        "n_ticks": artifact["n_ticks"],
+        "wall_clock_s": artifact["wall_clock_s"],
+        "compile_s": artifact.get("compile_s"),
+        "config_ticks_per_s": round(config_ticks_per_s(artifact), 1),
+        "source": source,
+    }
+
+
 def _load(path: Path) -> dict:
     try:
         return json.loads(path.read_text())
@@ -59,6 +109,27 @@ def _load(path: Path) -> dict:
                          "(run benchmarks.run --engine fleetsim --out first)")
     except json.JSONDecodeError as e:
         raise SystemExit(f"error: artifact {path} is not valid JSON: {e}")
+
+
+def _update_baseline(args, fresh_doc: dict, fresh: float,
+                     key: tuple[str, int]) -> int:
+    args.baseline.parent.mkdir(parents=True, exist_ok=True)
+    base_doc = None
+    if args.baseline.exists():
+        base_doc = _load(args.baseline)
+    if base_doc is not None and "baselines" in base_doc:
+        rows = [r for r in base_doc["baselines"] if artifact_key(r) != key]
+        rows.append(summarize_row(fresh_doc, args.fresh.name))
+        rows.sort(key=artifact_key)
+        base_doc["baselines"] = rows
+        args.baseline.write_text(json.dumps(base_doc, indent=1) + "\n")
+        print(f"baseline {args.baseline} row {key} updated from "
+              f"{args.fresh} ({fresh:,.0f} config-ticks/s)")
+        return 0
+    shutil.copyfile(args.fresh, args.baseline)
+    print(f"baseline {args.baseline} updated from {args.fresh} "
+          f"({fresh:,.0f} config-ticks/s)")
+    return 0
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -70,13 +141,15 @@ def main(argv: list[str] | None = None) -> int:
                     help="freshly-produced sweep artifact (JSON from "
                          "benchmarks.run --engine fleetsim --out)")
     ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
-                    help=f"reference artifact (default: {DEFAULT_BASELINE})")
+                    help=f"reference artifact or trajectory file "
+                         f"(default: {DEFAULT_BASELINE})")
     ap.add_argument("--max-regression", type=float, default=0.25,
                     help="maximum allowed fractional slowdown of "
                          "config_ticks_per_s vs the baseline (default 0.25)")
     ap.add_argument("--update-baseline", action="store_true",
-                    help="copy the fresh artifact over the baseline instead "
-                         "of checking (deliberate re-baselining)")
+                    help="write the fresh artifact into the baseline instead "
+                         "of checking (deliberate re-baselining; upserts the "
+                         "matching row of a trajectory file)")
     args = ap.parse_args(argv)
 
     if not 0 < args.max_regression < 1:
@@ -88,26 +161,33 @@ def main(argv: list[str] | None = None) -> int:
     except (KeyError, ValueError, TypeError) as e:
         print(f"error: fresh artifact {args.fresh} unusable: {e}")
         return 2
+    key = artifact_key(fresh_doc)
 
     if args.update_baseline:
-        args.baseline.parent.mkdir(parents=True, exist_ok=True)
-        shutil.copyfile(args.fresh, args.baseline)
-        print(f"baseline {args.baseline} updated from {args.fresh} "
-              f"({fresh:,.0f} config-ticks/s)")
-        return 0
+        return _update_baseline(args, fresh_doc, fresh, key)
 
     base_doc = _load(args.baseline)
+    base_row = baseline_entry(base_doc, key)
+    if base_row is None:
+        have = ([artifact_key(r) for r in base_doc["baselines"]]
+                if "baselines" in base_doc else [artifact_key(base_doc)])
+        print(f"PASS (no baseline): {args.baseline} has no "
+              f"(backend, n_devices)={key} row to regress against "
+              f"(have: {have}); fresh rate {fresh:,.0f} config-ticks/s — "
+              "add the row with --update-baseline")
+        return 0
     try:
-        base = config_ticks_per_s(base_doc)
+        base = config_ticks_per_s(base_row)
     except (KeyError, ValueError, TypeError) as e:
         print(f"error: baseline artifact {args.baseline} unusable: {e}")
         return 2
 
     floor = base * (1.0 - args.max_regression)
     ratio = fresh / base
+    print(f"key      : backend={key[0]}, n_devices={key[1]}")
     print(f"baseline : {base:12,.0f} config-ticks/s "
-          f"({base_doc['n_configs']} configs x {base_doc['n_ticks']} ticks "
-          f"in {base_doc['wall_clock_s']:.1f}s run)")
+          f"({base_row['n_configs']} configs x {base_row['n_ticks']} ticks "
+          f"in {base_row['wall_clock_s']:.1f}s run)")
     print(f"fresh    : {fresh:12,.0f} config-ticks/s "
           f"({fresh_doc['n_configs']} configs x {fresh_doc['n_ticks']} ticks "
           f"in {fresh_doc['wall_clock_s']:.1f}s run)")
