@@ -312,6 +312,69 @@ def fig_hedge_beyond_paper():
     return rows, claims
 
 
+def fig_llm():
+    """Beyond-paper (ServeSim): the policy matrix under continuous-batching
+    LLM servers.
+
+    Every server is a batch-decode replica (``server_model="batch"``) of a
+    roofline-derived gemma-7b service: one tick is one generated token
+    (``dt_us`` = the per-token decode cost), demand is prefill + a bimodal
+    generated length (8 vs 64 tokens), so the service-time variability the
+    paper exploits comes from *generation length*, not an artificial
+    distribution.  The hypothesis: in-network cloning still pays under
+    batching, because a short-generation clone on a lightly-batched replica
+    beats a long wait behind full slots."""
+    from repro.fleetsim.config import FleetConfig
+    from repro.fleetsim.llmserve import decode_step_us, llm_service
+    from repro.fleetsim.sweep import sweep_grid
+
+    spec = llm_service("gemma-7b")
+    dt = decode_step_us("gemma-7b")
+    policies = ["baseline", "c-clone", "netclone", "racksched",
+                "netclone+racksched"]
+    loads = [0.2, 0.5, 0.8] if FAST else [0.1, 0.2, 0.35, 0.5, 0.65, 0.8]
+    cfg = FleetConfig(n_servers=4, n_workers=8, service=spec, dt_us=dt,
+                      n_ticks=1_500 if FAST else 4_000,
+                      server_model="batch")
+    sw = sweep_grid(spec, policies, loads, [0], cfg=cfg)
+    rows = [{
+        "figure": "fig_llm", "policy": r.policy, "load": r.offered_load,
+        "throughput_mrps": round(r.throughput_mrps, 6),
+        "p50_us": round(r.p50_us, 1), "p99_us": round(r.p99_us, 1),
+        "cloned": r.n_cloned, "filtered": r.n_filtered,
+        "clone_drops": r.n_clone_drops,
+        "slot_occupancy": round(r.mean_slot_occupancy, 3),
+    } for r in sw.results]
+    claims = []
+    lo = loads[0]
+    base_lo = sw.select(policy="baseline", load=lo)[0]
+    nc_lo = sw.select(policy="netclone", load=lo)[0]
+    claims.append(("L1", "batched replicas: NetClone improves the latency "
+                         "distribution at low load (p50 strictly, p99 no "
+                         "worse) — a short-generation clone on a lightly-"
+                         "batched replica beats waiting out a long one",
+                   nc_lo.p50_us < base_lo.p50_us
+                   and nc_lo.p99_us <= base_lo.p99_us,
+                   f"p50 {nc_lo.p50_us:.0f}/{base_lo.p50_us:.0f} "
+                   f"p99 {nc_lo.p99_us:.0f}/{base_lo.p99_us:.0f} us @{lo}"))
+    occ = [sw.select(policy="baseline", load=ld)[0].mean_slot_occupancy
+           for ld in loads]
+    claims.append(("L2", "slot occupancy tracks offered load "
+                         "(monotone, ~load under baseline)",
+                   all(a < b for a, b in zip(occ, occ[1:]))
+                   and abs(occ[0] - loads[0]) < 0.15,
+                   " ".join(f"{o:.2f}" for o in occ)))
+    nc_hi = sw.select(policy="netclone", load=loads[-1])[0]
+    claims.append(("L3", "clone rate self-throttles as batch slots fill "
+                         "(high-load clone fraction < low-load)",
+                   nc_hi.clone_fraction
+                   < sw.select(policy="netclone",
+                               load=loads[0])[0].clone_fraction,
+                   f"{nc_hi.clone_fraction:.2f} @{loads[-1]} vs "
+                   f"{sw.select(policy='netclone', load=loads[0])[0].clone_fraction:.2f} @{loads[0]}"))
+    return rows, claims
+
+
 ALL_FIGURES = {
     "fig7": fig7_synthetic,
     "fig8": fig8_scalability,
@@ -323,4 +386,5 @@ ALL_FIGURES = {
     "fig15": fig15_filtering,
     "fig16": fig16_switch_failure,
     "fig_hedge": fig_hedge_beyond_paper,
+    "llm": fig_llm,
 }

@@ -257,6 +257,11 @@ def run_fleetsim(args) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("figures", nargs="*", help="figure names (DES engine)")
+    ap.add_argument("--figure", action="append", default=[],
+                    metavar="NAME",
+                    help="run one figure by name (repeatable; same set as "
+                         "the positional form, e.g. --figure llm for the "
+                         "ServeSim batch-server sweep)")
     ap.add_argument("--engine", choices=["figures", "fleetsim"],
                     default="figures")
     ap.add_argument("--ticks", type=int, default=50_000,
@@ -314,7 +319,7 @@ def main() -> None:
 
     from benchmarks.figures import ALL_FIGURES
 
-    wanted = args.figures or list(ALL_FIGURES)
+    wanted = (args.figures + args.figure) or list(ALL_FIGURES)
     unknown = [n for n in wanted if n not in ALL_FIGURES]
     if unknown:
         ap.error(f"unknown figure(s) {unknown}; have {list(ALL_FIGURES)}")

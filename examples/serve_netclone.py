@@ -5,7 +5,13 @@ requests; replica 1 periodically stalls (simulating GC pauses / noisy
 neighbours).  Compare policies:
 
     PYTHONPATH=src python examples/serve_netclone.py
+
+Environment knobs (used by the CI smoke test to shrink the run):
+``SERVE_DEMO_MODEL`` (registry arch id), ``SERVE_DEMO_REQS``,
+``SERVE_DEMO_HORIZON``.
 """
+
+import os
 
 import jax
 import numpy as np
@@ -14,12 +20,13 @@ from repro.configs import get_config
 from repro.models import family_of
 from repro.serve import DecodeReplica, NetCloneServer
 
-cfg = get_config("gemma-7b", smoke=True)
+cfg = get_config(os.environ.get("SERVE_DEMO_MODEL", "gemma-7b"), smoke=True)
 fam = family_of(cfg)
 params = fam.init_params(cfg, jax.random.PRNGKey(0))
 rng = np.random.default_rng(1)
 
-N_REQ, HORIZON = 60, 120
+N_REQ = int(os.environ.get("SERVE_DEMO_REQS", 60))
+HORIZON = int(os.environ.get("SERVE_DEMO_HORIZON", 120))
 workload = [(int(t), rng.integers(0, cfg.vocab_size, 4).astype(np.int32))
             for t in np.sort(rng.integers(0, HORIZON, N_REQ))]
 

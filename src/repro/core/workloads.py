@@ -111,6 +111,50 @@ class BimodalService(ServiceProcess):
         return f"Bimodal({1-self.p_long:.0%}-{self.short:g},{self.p_long:.0%}-{self.long:g})"
 
 
+class LLMBimodalService(ServiceProcess):
+    """LLM-serving demand: fixed prefill cost plus a per-request decode cost
+    proportional to a bimodal generated length.
+
+    Total demand is ``prefill + gen × decode`` µs where ``gen`` is
+    ``gen_long`` with probability ``p_long`` else ``gen_short`` — short
+    chat-style turns vs long completions.  The generated length is intrinsic
+    to the request (shared by both copies of a clone pair); execution adds
+    ±10% noise + jitter per copy, like the other real-workload processes.
+    Derive the per-token numbers from a model registry config with
+    :func:`repro.fleetsim.llmserve.llm_service`.
+    """
+
+    def __init__(self, prefill: float = 200.0, decode: float = 10.0,
+                 gen_short: float = 8.0, gen_long: float = 64.0,
+                 p_long: float = 0.10, **kw):
+        super().__init__(**kw)
+        if prefill < 0:
+            raise ValueError("prefill must be >= 0")
+        if decode <= 0 or gen_short <= 0 or gen_long <= 0:
+            raise ValueError("decode / gen_short / gen_long must be > 0")
+        if not 0.0 <= p_long <= 1.0:
+            raise ValueError("need 0 <= p_long <= 1")
+        self.prefill, self.decode = float(prefill), float(decode)
+        self.gen_short, self.gen_long = float(gen_short), float(gen_long)
+        self.p_long = float(p_long)
+        self.mean = self.prefill + self.decode * (
+            (1 - self.p_long) * self.gen_short
+            + self.p_long * self.gen_long)
+
+    def intrinsic(self, rng, n):
+        long_mask = rng.random(n) < self.p_long
+        gen = np.where(long_mask, self.gen_long, self.gen_short)
+        return self.prefill + gen * self.decode
+
+    def _execute_base(self, rng, base):
+        return base * float(rng.uniform(0.9, 1.1))
+
+    def __repr__(self):
+        return (f"LLM(prefill={self.prefill:g},decode={self.decode:g},"
+                f"gen={self.gen_short:g}/{self.gen_long:g}"
+                f"@{self.p_long:.0%})")
+
+
 class BoundedParetoService(ServiceProcess):
     """Heavy-tailed RPCs: bounded Pareto on ``[xm, cap]`` with shape ``alpha``.
 

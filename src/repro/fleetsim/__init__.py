@@ -27,6 +27,13 @@ observability: a device-resident request-event ring buffer and windowed
 time-series, decoded host-side into per-request timelines and
 Chrome-trace/CSV exports — see ``docs/observability.md``.
 
+``repro.fleetsim.llmserve`` (ServeSim) adds an LLM-serving workload layer:
+model-derived ``llm`` service specs (:func:`llm_service`, roofline decode /
+prefill costs) and a continuous-batching server stage selected by the
+static ``FleetConfig.server_model="batch"`` flag, cross-validated against
+the real-model :class:`repro.serve.engine.DecodeReplica`
+(:func:`serve_equivalence`).
+
 See ``docs/architecture.md`` for the layer map (DES ↔ scenarios registry ↔
 FleetSim stages ↔ shard layer) and the array-layout tables.
 """
@@ -74,11 +81,18 @@ from repro.fleetsim.telemetry import (
 )
 from repro.fleetsim.validate import (
     CrossCheck,
+    ServeCheck,
     ShardCheck,
     cross_check_scenario,
     cross_validate,
     cross_validate_spec,
+    serve_equivalence,
     shard_equivalence,
+)
+from repro.fleetsim.llmserve import (
+    decode_step_us,
+    llm_service,
+    prefill_us,
 )
 
 __all__ = [
@@ -117,9 +131,14 @@ __all__ = [
     "plan_grid",
     "simulate_batch_sharded",
     "CrossCheck",
+    "ServeCheck",
     "ShardCheck",
     "cross_validate",
     "cross_validate_spec",
     "cross_check_scenario",
+    "serve_equivalence",
     "shard_equivalence",
+    "llm_service",
+    "decode_step_us",
+    "prefill_us",
 ]

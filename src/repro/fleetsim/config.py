@@ -17,6 +17,7 @@ from repro.scenarios import registry
 from repro.scenarios.service import (  # noqa: F401  (re-exported API)
     SERVICE_BIMODAL,
     SERVICE_EXPONENTIAL,
+    SERVICE_LLM,
     SERVICE_PARETO,
     ServiceSpec,
 )
@@ -163,6 +164,23 @@ class FleetConfig:
     telemetry: bool = False
     trace_cap: int = 2 ** 15            # ring-buffer records (flight recorder)
     window_ticks: int = 1_000           # time-series window length (ticks)
+    # server_model: "fcfs" (the original per-worker FCFS ring) or "batch"
+    # (ServeSim, repro.fleetsim.llmserve: continuous-batching slots —
+    # admit-into-free-slot, all busy slots progress every tick, complete on
+    # exhausted demand).  Static like coordinator/hedge_timer: with "fcfs"
+    # the batch stage contributes zero traced ops and the goldens stay
+    # bit-identical; with "batch" the FCFS ring is never traced and the
+    # queue-length piggyback reports waiting-for-a-slot depth, so routing
+    # policies route on batch pressure.
+    server_model: str = "fcfs"
+    # decode slots per server under server_model="batch" (0 → n_workers)
+    batch_slots: int = 0
+    # batching slowdown: a slot running with k busy neighbours progresses at
+    # 1 / (1 + batch_coupling × (k-1)/(B-1)) per tick.  0 (default) models
+    # memory-bound decode (batch size is nearly free — slots independent,
+    # matching serve.engine.DecodeReplica); 1 halves per-slot progress at
+    # full occupancy (compute-bound prefill-heavy regime).
+    batch_coupling: float = 0.0
     # response-filter backend: "vectorized" (one scatter/tick, default),
     # "scan" (exact lane-sequential switch_jax.filter semantics), "pallas"
     # (kernels.fingerprint_filter — the VMEM-resident filter kernel), or
@@ -199,6 +217,13 @@ class FleetConfig:
                              "(REQ_IDs are carried in float32 payloads)")
         if self.coordinator and self.coordinator_cap < 1:
             raise ValueError("coordinator_cap must be >= 1")
+        if self.server_model not in ("fcfs", "batch"):
+            raise ValueError(f"unknown server_model {self.server_model!r} "
+                             "(expected 'fcfs' or 'batch')")
+        if self.batch_slots < 0:
+            raise ValueError("batch_slots must be >= 0 (0 → n_workers)")
+        if self.batch_coupling < 0:
+            raise ValueError("batch_coupling must be >= 0")
         if self.telemetry:
             if self.trace_cap < 1:
                 raise ValueError("trace_cap must be >= 1")
@@ -259,6 +284,13 @@ class FleetConfig:
         """Resolved per-slot entry budget: explicit, or ``max_arrivals``
         (every arrival lane of one tick can arm without drops)."""
         return self.hedge_wheel_width or self.max_arrivals
+
+    @property
+    def n_slots(self) -> int:
+        """Resolved decode slots per server under ``server_model="batch"``:
+        explicit ``batch_slots``, or ``n_workers`` (each worker lane becomes
+        one continuous-batching slot, keeping the state shapes shared)."""
+        return self.batch_slots or self.n_workers
 
     @property
     def n_windows(self) -> int:

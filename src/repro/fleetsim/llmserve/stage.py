@@ -1,0 +1,229 @@
+"""The continuous-batching server stage (``FleetConfig.server_model="batch"``).
+
+Each server is a continuous-batching replica with ``cfg.n_slots`` decode
+slots instead of an FCFS worker pool: a queued request is admitted into any
+free slot, **every** busy slot makes progress each tick, and a request
+completes when its demand (prefill + generated-length × per-token decode,
+in µs — see :mod:`repro.fleetsim.llmserve.service`) is exhausted.  This is
+the array form of :class:`repro.serve.engine.DecodeReplica`, and the
+cross-validation tier in :mod:`repro.fleetsim.llmserve.oracle` holds the
+two to each other.
+
+The stage reuses the FCFS state layout — the worker metadata array *is*
+the slot array (same ``WF`` payload fields, ``REM`` holds remaining
+demand) and the ring queue *is* the admission queue — so it composes with
+every other stage unchanged.  Batching pressure is exported two ways:
+
+* the response piggyback carries the post-admission **waiting** depth
+  (requests beyond the free slots), matching ``DecodeReplica``'s
+  ``c.state``, so netclone/racksched policies clone/JSQ on batch
+  pressure exactly as they do on FCFS queue depth;
+* busy-slot occupancy accumulates into ``Metrics.n_slot_busy`` and
+  surfaces as ``FleetResult.mean_slot_occupancy``.
+
+``batch_coupling`` models the compute-bound end of the batching spectrum:
+a slot running beside ``k`` busy neighbours progresses at ``1 / (1 +
+coupling × (k-1)/(B-1))`` per tick.  At the default ``coupling=0`` slots
+are independent — memory-bound decode, where batch admission is nearly
+free — and with ``batch_slots == n_workers`` the stage's arithmetic is
+identical to the FCFS ring's (enforced by ``tests/test_llmserve.py``).
+
+Like the coordinator / hedge-timer stages this is compile-time optional:
+``stages.stage_server`` dispatches here only when the static
+``server_model`` flag says "batch", so ``"fcfs"`` programs contain zero
+ops from this module and their goldens stay bit-identical.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.header import CLO_CLONE
+from repro.fleetsim.config import FleetConfig
+from repro.fleetsim.state import (
+    QF,
+    QF_BASE,
+    QF_CLIENT,
+    QF_CLO,
+    QF_FRACK,
+    QF_HOP,
+    QF_IDX,
+    QF_RID,
+    QF_TARR,
+    WF,
+    WF_CLIENT,
+    WF_CLO,
+    WF_FRACK,
+    WF_HOP,
+    WF_IDX,
+    WF_REM,
+    WF_RID,
+    WF_TARR,
+    FleetState,
+)
+from repro.fleetsim.telemetry.device import emit
+from repro.fleetsim.telemetry.events import EV_SERVER_FINISH, EV_SERVER_START
+
+
+def stage_server_batch(cfg: FleetConfig, params, state: FleetState,
+                       arr, lanes):
+    """Slots advance (coupling-scaled), server-side CLO=2 drop rule at the
+    slot-wait boundary, FCFS admission-ring enqueue, and admission of the
+    oldest waiting requests into freed slots (demand drawn here: intrinsic
+    base × per-execution noise × straggler slowdown + jitter spikes)."""
+    from repro.fleetsim.stages import (
+        Responses,
+        _execute,
+        _rank_among_earlier,
+    )
+
+    RK, S, B, Q = cfg.n_racks, cfg.n_servers, cfg.n_slots, cfg.queue_cap
+    ST = RK * S
+    dt = jnp.float32(cfg.dt_us)
+    srv_ids = jnp.arange(ST)
+    m = state.metrics
+    d_dst, d_act, d_clo = lanes.dst, lanes.act, lanes.clo
+
+    # -- slots advance, completions (busy ⇔ REM > 0) -----------------
+    # every busy slot progresses this tick; batch_coupling throttles the
+    # per-slot rate with occupancy (0 → independent slots, memory-bound)
+    meta = state.workers.meta.reshape(ST, B, WF)
+    was_busy = meta[:, :, WF_REM] > 0
+    k_busy = was_busy.sum(axis=1)                    # (ST,)
+    speed = 1.0 / (1.0 + jnp.float32(cfg.batch_coupling)
+                   * jnp.maximum(k_busy - 1, 0) / max(B - 1, 1))
+    rem = jnp.where(was_busy, meta[:, :, WF_REM] - dt * speed[:, None], 0.0)
+    done = was_busy & (rem <= 0)                     # (ST, B)
+    busy_after = was_busy & ~done
+    n_free = (~busy_after).sum(axis=1)               # (ST,)
+    m = m._replace(n_slot_busy=m.n_slot_busy + k_busy.sum())
+    rq = state.queues
+    q_head = rq.head.reshape(ST)
+    n_queued = rq.count.reshape(ST)
+
+    # -- CLO=2 drop rule --------------------------------------------
+    # A clone is dropped iff a request would still be *waiting* for a slot
+    # when it arrives — the same boundary DecodeReplica.queue_len reports.
+    # This tick's completions free slots that drain min(n_free, n_queued)
+    # waiters first; earlier arrival lanes then take the leftover free
+    # slots before queuing.  Two passes resolve the (rare) dependence of
+    # one clone's fate on an earlier clone's.
+    q_left = jnp.maximum(n_queued - n_free, 0)       # still waiting
+    free_left = jnp.maximum(n_free - n_queued, 0)    # still free
+    onehot = (d_dst[None, :] == srv_ids[:, None])    # (ST, D)
+    is_clone = d_clo == CLO_CLONE
+    n_earlier = _rank_among_earlier(onehot & (d_act & ~is_clone)[None, :])
+    occupied = (q_left[d_dst] > 0) | \
+        (jnp.take_along_axis(n_earlier, d_dst[None, :], axis=0)[0]
+         > free_left[d_dst])
+    drop0 = is_clone & d_act & occupied
+    keep0 = d_act & ~drop0
+    n_earlier1 = _rank_among_earlier(onehot & keep0[None, :])
+    occupied1 = (q_left[d_dst] > 0) | \
+        (jnp.take_along_axis(n_earlier1, d_dst[None, :], axis=0)[0]
+         > free_left[d_dst])
+    clone_drop = is_clone & d_act & occupied1
+    d_keep = d_act & ~clone_drop
+    m = m._replace(n_clone_drops=m.n_clone_drops + clone_drop.sum())
+
+    # -- enqueue into the admission rings ----------------------------
+    lane_m = onehot & d_keep[None, :]                # (ST, D)
+    lane_rank = _rank_among_earlier(lane_m)          # (ST, D)
+    rank_own = jnp.take_along_axis(lane_rank, d_dst[None, :], axis=0)[0]
+    ovf = d_keep & (n_queued[d_dst] + rank_own >= Q)
+    m = m._replace(n_overflow=m.n_overflow + ovf.sum())
+    enq_ok = d_keep & ~ovf
+    slot = (q_head[d_dst] + n_queued[d_dst] + rank_own) % Q
+    flat_q = rq.data.reshape(ST * Q, QF)
+    qrow = jnp.where(enq_ok, d_dst * Q + slot, jnp.int32(ST * Q))
+    flat_q = flat_q.at[qrow].set(lanes.payload, mode="drop")
+    count1 = n_queued + (onehot & enq_ok[None, :]).sum(axis=1)
+
+    # -- admit: ring head into free slots ----------------------------
+    R = min(B, Q)
+    n_start = jnp.minimum(count1, n_free)            # (ST,)
+    r = jnp.arange(R)
+    startm = r[None, :] < n_start[:, None]           # (ST, R)
+    deq_slot = (q_head[:, None] + r[None, :]) % Q    # (ST, R)
+    job = flat_q[srv_ids[:, None] * Q + deq_slot]    # (ST, R, QF)
+    # r-th free slot of each server, via rank matching (no sort)
+    sfree = ~busy_after
+    srank = _rank_among_earlier(sfree)               # (ST, B)
+    sel = (sfree[:, None, :]
+           & (srank[:, None, :] == r[None, :, None]))  # (ST, R, B)
+    scol = jnp.einsum("srw,w->sr", sel.astype(jnp.int32), jnp.arange(B))
+    start_base = job[:, :, QF_BASE]
+    exec_dur = _execute(cfg, arr.k_exec, start_base) \
+        * params.slowdown[:, None]
+    wrow = jnp.where(startm, srv_ids[:, None] * B + scol,
+                     jnp.int32(ST * B))
+    # responses are read from the PRE-overwrite slot metadata
+    meta_flat = jnp.concatenate(
+        [jnp.where(busy_after, rem, 0.0)[:, :, None],
+         meta[:, :, 1:]], axis=2).reshape(ST * B, WF)
+    new_meta = jnp.stack([
+        exec_dur + cfg.server_overhead_us,
+        job[:, :, QF_TARR], job[:, :, QF_RID], job[:, :, QF_CLO],
+        job[:, :, QF_IDX], job[:, :, QF_CLIENT],
+        job[:, :, QF_HOP], job[:, :, QF_FRACK]], axis=2)   # (ST, R, WF)
+    slot_meta = meta_flat.at[wrow.reshape(-1)].set(
+        new_meta.reshape(-1, WF), mode="drop").reshape(ST, B, WF)
+    q_count = count1 - n_start
+    queues = rq._replace(head=((q_head + n_start) % Q).reshape(RK, S),
+                         count=q_count.reshape(RK, S),
+                         data=flat_q.reshape(RK, S, Q, QF))
+
+    # -- compact completions into the response lanes -----------------
+    K = min(cfg.max_responses, ST * B)
+    done_flat = done.reshape(-1)                     # (ST·B,)
+    m = m._replace(
+        n_resp=m.n_resp + done_flat.sum(),
+        n_resp_empty=m.n_resp_empty
+        + (done_flat & (jnp.repeat(q_count, B) == 0)).sum(),
+        lost_down_resp=m.lost_down_resp
+        + jnp.where(arr.down, done_flat.sum(), 0))
+    rrank = jnp.cumsum(done_flat) - done_flat.astype(jnp.int32)
+    clipped = done_flat & (rrank >= K)
+    m = m._replace(n_resp_clipped=m.n_resp_clipped + clipped.sum())
+    krow = jnp.where(done_flat & ~clipped, rrank, jnp.int32(K))
+    resp_payload = jnp.concatenate([                 # (ST·B, WF + 2)
+        meta_flat,
+        jnp.repeat(srv_ids, B).astype(jnp.float32)[:, None],
+        jnp.repeat(q_count, B).astype(jnp.float32)[:, None]], axis=1)
+    resp = jnp.zeros((K, WF + 2), jnp.float32).at[krow].set(
+        resp_payload, mode="drop")
+    n_done = jnp.minimum(done_flat.sum(), K)
+    resp_active = (jnp.arange(K) < n_done) & ~arr.down
+
+    state = state._replace(
+        queues=queues,
+        workers=state.workers._replace(meta=slot_meta.reshape(RK, S, B,
+                                                              WF)),
+        metrics=m)
+    if cfg.telemetry:
+        # finishes before starts: completions free the slots the admitted
+        # jobs then occupy, and emit order is the within-tick order
+        tr = emit(state.trace, done_flat, tick=arr.tick,
+                  kind=EV_SERVER_FINISH,
+                  rid=meta_flat[:, WF_RID].astype(jnp.int32),
+                  server=jnp.repeat(srv_ids, B),
+                  client=meta_flat[:, WF_CLIENT].astype(jnp.int32),
+                  arg=jnp.repeat(q_count, B))  # arg: post-admit wait depth
+        tr = emit(tr, startm.reshape(-1), tick=arr.tick,
+                  kind=EV_SERVER_START,
+                  rid=job[:, :, QF_RID].reshape(-1).astype(jnp.int32),
+                  server=jnp.repeat(srv_ids, R),
+                  client=job[:, :, QF_CLIENT].reshape(-1).astype(jnp.int32),
+                  arg=job[:, :, QF_CLO].reshape(-1).astype(jnp.int32))
+        state = state._replace(trace=tr)
+    return state, Responses(
+        active=resp_active,
+        rid=resp[:, WF_RID].astype(jnp.int32),
+        clo=resp[:, WF_CLO].astype(jnp.int32),
+        idx=resp[:, WF_IDX].astype(jnp.int32),
+        client=resp[:, WF_CLIENT].astype(jnp.int32),
+        tarr=resp[:, WF_TARR],
+        hop=resp[:, WF_HOP],
+        frack=resp[:, WF_FRACK].astype(jnp.int32),
+        sid=resp[:, WF].astype(jnp.int32),
+        qlen=resp[:, WF + 1].astype(jnp.int32))

@@ -56,6 +56,9 @@ class FleetResult:
     # the (possibly swept) hedge delay this cell ran with; 0.0 when the
     # hedge_timer stage was compiled out
     hedge_delay_us: float = 0.0
+    # mean busy fraction of the decode slots (ServeSim batch server);
+    # 0.0 when server_model == "fcfs" compiled the batch stage out
+    mean_slot_occupancy: float = 0.0
     rack_completed: tuple[int, ...] = ()       # in-window, by serving rack
     rack_p50_us: tuple[float, ...] = ()
     rack_p99_us: tuple[float, ...] = ()
@@ -85,6 +88,7 @@ class FleetResult:
             "coord_overflow": self.n_coord_overflow,
             "hedges_armed": self.n_hedges_armed,
             "hedge_delay_us": round(self.hedge_delay_us, 2),
+            "slot_occupancy": round(self.mean_slot_occupancy, 3),
             "empty_q": round(self.empty_queue_fraction, 3),
             "rack_completed": list(self.rack_completed),
             "rack_p50_us": [round(v, 1) for v in self.rack_p50_us],
@@ -123,6 +127,10 @@ def summarize(cfg: FleetConfig, metrics, *, policy: str, load: float,
     """
     if hedge_delay_us is None:
         hedge_delay_us = cfg.hedge_delay_us if cfg.hedge_timer else 0.0
+    occupancy = 0.0
+    if cfg.server_model == "batch":
+        occupancy = int(metrics.n_slot_busy) / float(
+            cfg.n_ticks * cfg.n_servers_total * cfg.n_slots)
     rack_hist = np.asarray(metrics.hist).reshape(cfg.n_racks, cfg.hist_bins)
     hist = rack_hist.sum(axis=0)
     mids = bin_mids_us(cfg)
@@ -160,6 +168,7 @@ def summarize(cfg: FleetConfig, metrics, *, policy: str, load: float,
         n_hedges_cancelled=int(metrics.n_hedges_cancelled),
         n_wheel_dropped=int(metrics.n_wheel_dropped),
         hedge_delay_us=float(hedge_delay_us),
+        mean_slot_occupancy=occupancy,
         rack_completed=tuple(int(r.sum()) for r in rack_hist),
         rack_p50_us=tuple(hist_percentile(r, mids, 50.0) for r in rack_hist),
         rack_p99_us=tuple(hist_percentile(r, mids, 99.0) for r in rack_hist),

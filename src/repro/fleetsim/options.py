@@ -108,6 +108,9 @@ class EngineOptions:
             staged_only.append("the coordinator stage (laedge)")
         if cfg.hedge_timer:
             staged_only.append("the hedge_timer stage (hedge)")
+        if getattr(cfg, "server_model", "fcfs") == "batch":
+            staged_only.append(
+                "the batch server stage (server_model='batch')")
         if self.telemetry or cfg.telemetry:
             staged_only.append("telemetry (FleetScope)")
         if self.backend == "fused":

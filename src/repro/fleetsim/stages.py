@@ -69,6 +69,7 @@ from repro.core.switch_jax import (
 from repro.fleetsim.config import (
     SERVICE_BIMODAL,
     SERVICE_EXPONENTIAL,
+    SERVICE_LLM,
     SERVICE_PARETO,
     FleetConfig,
 )
@@ -141,6 +142,12 @@ def _intrinsic(cfg: FleetConfig, u):
         u = jnp.minimum(u, 1.0 - 1e-7)
         r = (xm / cap) ** alpha
         return (xm / (1.0 - u * (1.0 - r)) ** (1.0 / alpha)).astype(jnp.float32)
+    if cfg.service.kind == SERVICE_LLM:
+        # prefill + generated-length × per-token decode; the bimodal
+        # generation length is intrinsic (shared by both clone copies)
+        prefill, decode, gen_short, gen_long, p_long = p
+        gen = jnp.where(u < p_long, gen_long, gen_short)
+        return (prefill + gen * decode).astype(jnp.float32)
     raise ValueError(cfg.service.kind)
 
 
@@ -615,7 +622,18 @@ def stage_server(cfg: FleetConfig, params, state: FleetState,
     """Workers advance, server-side CLO=2 drop rule, FCFS ring enqueue, and
     dequeue of the oldest queued jobs onto the freed workers (execution
     times drawn here: intrinsic base × per-execution noise × straggler
-    slowdown + jitter spikes)."""
+    slowdown + jitter spikes).
+
+    ``cfg.server_model`` is a static flag: ``"batch"`` dispatches to the
+    continuous-batching slot stage (ServeSim,
+    :func:`repro.fleetsim.llmserve.stage.stage_server_batch`) and the FCFS
+    body below is never traced; ``"fcfs"`` (default) traces exactly the
+    program it always did, so the goldens stay bit-identical."""
+    if cfg.server_model == "batch":
+        # deferred import: llmserve.stage reuses this module's helpers
+        from repro.fleetsim.llmserve.stage import stage_server_batch
+
+        return stage_server_batch(cfg, params, state, arr, lanes)
     RK, S, W, Q = cfg.n_racks, cfg.n_servers, cfg.n_workers, cfg.queue_cap
     ST = RK * S
     D = lanes.dst.shape[0]

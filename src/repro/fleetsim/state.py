@@ -171,6 +171,10 @@ class Metrics(NamedTuple):
     # DES likewise silently drops a hedge firing into a down switch)
     n_hedges_cancelled: jax.Array
     n_wheel_dropped: jax.Array  # … lost to wheel-slot exhaustion
+    # batch-server occupancy (ServeSim, repro.fleetsim.llmserve): busy
+    # decode slots summed over servers × ticks; only the batch server
+    # stage ever moves it off zero
+    n_slot_busy: jax.Array
 
 
 class FleetState(NamedTuple):
@@ -215,7 +219,8 @@ def init_metrics(cfg: FleetConfig) -> Metrics:
                    n_completed_win=z, n_resp=z, n_resp_empty=z,
                    lost_down_resp=z,
                    n_coord_queued=z, n_coord_overflow=z,
-                   n_hedges_armed=z, n_hedges_cancelled=z, n_wheel_dropped=z)
+                   n_hedges_armed=z, n_hedges_cancelled=z, n_wheel_dropped=z,
+                   n_slot_busy=z)
 
 
 def init_coord_state(cfg: FleetConfig) -> CoordState:
@@ -236,7 +241,10 @@ def init_hedge_wheel(cfg: FleetConfig) -> HedgeWheel:
 
 
 def init_fleet_state(cfg: FleetConfig, key: jax.Array) -> FleetState:
-    r, s, q, w = cfg.n_racks, cfg.n_servers, cfg.queue_cap, cfg.n_workers
+    r, s, q = cfg.n_racks, cfg.n_servers, cfg.queue_cap
+    # under server_model="batch" the worker lanes are the decode slots
+    # (same WF payload layout, one stacked array, one scatter per tick)
+    w = cfg.n_slots if cfg.server_model == "batch" else cfg.n_workers
     return FleetState(
         switch=init_fabric_switch(cfg),
         dedup=jnp.zeros((cfg.n_dedup_slots,), jnp.int32),

@@ -22,12 +22,23 @@ from repro.core.workloads import (
     BimodalService,
     BoundedParetoService,
     ExponentialService,
+    LLMBimodalService,
     ServiceProcess,
 )
 
 SERVICE_EXPONENTIAL = "exponential"
 SERVICE_BIMODAL = "bimodal"
 SERVICE_PARETO = "pareto"
+SERVICE_LLM = "llm"
+
+#: per-kind positional parameter names, for construction-time validation and
+#: actionable error messages
+_PARAM_NAMES = {
+    SERVICE_EXPONENTIAL: ("mean",),
+    SERVICE_BIMODAL: ("short", "long", "p_long"),
+    SERVICE_PARETO: ("xm", "alpha", "cap"),
+    SERVICE_LLM: ("prefill", "decode", "gen_short", "gen_long", "p_long"),
+}
 
 
 @dataclass(frozen=True)
@@ -44,6 +55,42 @@ class ServiceSpec:
     jitter_p: float = 0.01
     jitter_mult: float = 15.0
     mean: float = 0.0           # pre-jitter mean, for load normalisation
+
+    def __post_init__(self):
+        # Reject degenerate specs here with one actionable line instead of
+        # letting a zero-mean process fail deep inside the engines (NaN
+        # loads, divide-by-zero in load_to_rate, silent all-zero demand).
+        if not 0.0 <= self.jitter_p <= 1.0:
+            raise ValueError(
+                f"service jitter_p must be in [0, 1], got {self.jitter_p}")
+        if self.jitter_mult <= 0:
+            raise ValueError(
+                f"service jitter_mult must be > 0, got {self.jitter_mult}")
+        names = _PARAM_NAMES.get(self.kind)
+        if names is None:
+            return          # custom kinds validate themselves in to_process
+        if len(self.params) != len(names):
+            raise ValueError(
+                f"service kind {self.kind!r} takes {len(names)} params "
+                f"{names}, got {len(self.params)}")
+        p = dict(zip(names, self.params))
+        for weight in ("p_long",):
+            if weight in p and not 0.0 <= p[weight] <= 1.0:
+                raise ValueError(
+                    f"service {self.kind!r} {weight} must be in [0, 1], "
+                    f"got {p[weight]}")
+        # prefill may be 0 (decode-only service); every other scale must be
+        # strictly positive for the process to have a positive mean
+        for name, v in p.items():
+            lo_ok = v >= 0.0 if name in ("prefill", "p_long") else v > 0.0
+            if not lo_ok:
+                raise ValueError(
+                    f"service {self.kind!r} {name} must be "
+                    f"{'>= 0' if name == 'prefill' else '> 0'}, got {v}")
+        if self.kind == SERVICE_PARETO and not p["xm"] < p["cap"]:
+            raise ValueError(
+                f"service 'pareto' needs xm < cap, got xm={p['xm']} "
+                f"cap={p['cap']}")
 
     @property
     def effective_mean(self) -> float:
@@ -68,11 +115,30 @@ class ServiceSpec:
                    mean=float(mean), **kw)
 
     @classmethod
+    def llm(cls, prefill: float = 200.0, decode: float = 10.0,
+            gen_short: float = 8.0, gen_long: float = 64.0,
+            p_long: float = 0.10, **kw) -> "ServiceSpec":
+        """LLM-serving demand: a fixed prefill cost plus a bimodal
+        generated-length decode cost (``prefill + gen × decode`` µs, with
+        ``gen`` drawn short/long per request).  Derive the numbers from a
+        model registry config with
+        :func:`repro.fleetsim.llmserve.llm_service`."""
+        mean = prefill + decode * ((1 - p_long) * gen_short
+                                   + p_long * gen_long)
+        return cls(SERVICE_LLM,
+                   (float(prefill), float(decode), float(gen_short),
+                    float(gen_long), float(p_long)),
+                   mean=float(mean), **kw)
+
+    @classmethod
     def from_process(cls, svc: ServiceProcess) -> "ServiceSpec":
         """Map a DES service process onto its array-form spec."""
         kw = dict(jitter_p=svc.jitter_p, jitter_mult=svc.jitter_mult)
         if isinstance(svc, ExponentialService):
             return cls.exponential(svc.mean, **kw)
+        if isinstance(svc, LLMBimodalService):
+            return cls.llm(svc.prefill, svc.decode, svc.gen_short,
+                           svc.gen_long, svc.p_long, **kw)
         if isinstance(svc, BimodalService):
             return cls.bimodal(svc.short, svc.long, svc.p_long, **kw)
         if isinstance(svc, BoundedParetoService):
@@ -89,6 +155,8 @@ class ServiceSpec:
             return BimodalService(*self.params, **kw)
         if self.kind == SERVICE_PARETO:
             return BoundedParetoService(*self.params, **kw)
+        if self.kind == SERVICE_LLM:
+            return LLMBimodalService(*self.params, **kw)
         raise ValueError(f"unknown service kind {self.kind!r}")
 
     # ------------------------------------------------------------- JSON ----
@@ -110,7 +178,8 @@ class ServiceSpec:
         kind, params = d["kind"], tuple(d["params"])
         factory = {SERVICE_EXPONENTIAL: cls.exponential,
                    SERVICE_BIMODAL: cls.bimodal,
-                   SERVICE_PARETO: cls.pareto}.get(kind)
+                   SERVICE_PARETO: cls.pareto,
+                   SERVICE_LLM: cls.llm}.get(kind)
         if factory is None:
             raise ValueError(f"unknown service kind {kind!r}")
         return factory(*params, **kw)

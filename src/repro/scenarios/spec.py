@@ -77,6 +77,17 @@ class Scenario:
     fail_window_ticks: tuple[int, int] | None = None
     queue_cap: int | None = None
     max_arrivals: int | None = None
+    # ServeSim (repro.fleetsim.llmserve): "batch" swaps the FCFS worker
+    # pool for continuous-batching decode slots; batch_slots/batch_coupling
+    # mirror the FleetConfig knobs (0 slots → one per worker)
+    server_model: str = "fcfs"
+    batch_slots: int = 0
+    batch_coupling: float = 0.0
+    # tick length override (µs).  LLM scenarios pin it to the model's
+    # per-token decode cost so one tick is one generated token; None keeps
+    # the engine default (or the trace's own dt for trace arrivals, which
+    # define their schedule's time base and reject an override here).
+    dt_us: float | None = None
     # FleetScope observability (repro.fleetsim.telemetry): None runs the
     # exact telemetry-off program; a spec compiles the trace/series stages in
     telemetry: TelemetrySpec | None = None
@@ -111,7 +122,20 @@ class Scenario:
                   n_workers=self.workers, n_ticks=self.n_ticks,
                   service=self.service, arrival=self.arrival.kind)
         if self.arrival.kind == "trace":
+            if self.dt_us is not None:
+                raise ValueError("dt_us cannot be overridden for trace "
+                                 "arrivals; the trace defines its own time "
+                                 "base (TraceArrival.dt_us)")
             kw["dt_us"] = self.arrival.dt_us
+        elif self.dt_us is not None:
+            kw["dt_us"] = self.dt_us
+        if self.server_model != "fcfs":
+            kw["server_model"] = self.server_model
+            kw["batch_slots"] = self.batch_slots
+            kw["batch_coupling"] = self.batch_coupling
+        elif self.batch_slots or self.batch_coupling:
+            raise ValueError("batch_slots / batch_coupling only apply to "
+                             "server_model='batch'")
         if self.queue_cap is not None:
             kw["queue_cap"] = self.queue_cap
         if self.max_arrivals is not None:
@@ -193,6 +217,11 @@ class Scenario:
         if self.racks != 1:
             raise ValueError("the DES models a single ToR; scenario has "
                              f"racks={self.racks}")
+        if self.server_model != "fcfs":
+            raise ValueError(
+                "the DES models FCFS worker pools; batch-server scenarios "
+                "cross-validate against the DecodeReplica oracle instead "
+                "(repro.fleetsim.llmserve.oracle.serve_equivalence)")
         if (self.hot_rack_weight != 1.0 or self.straggler_rack_mult != 1.0
                 or self.slowdown is not None):
             raise ValueError("the DES does not model slowdown / rack-skew "
@@ -233,6 +262,14 @@ class Scenario:
             d["queue_cap"] = self.queue_cap
         if self.max_arrivals is not None:
             d["max_arrivals"] = self.max_arrivals
+        if self.server_model != "fcfs":
+            d["server_model"] = self.server_model
+            if self.batch_slots:
+                d["batch_slots"] = self.batch_slots
+            if self.batch_coupling:
+                d["batch_coupling"] = self.batch_coupling
+        if self.dt_us is not None:
+            d["dt_us"] = self.dt_us
         if self.telemetry is not None:
             d["telemetry"] = self.telemetry.to_json()
         if self.engine is not None:
@@ -242,6 +279,7 @@ class Scenario:
     _JSON_KEYS = ("name", "policy", "load", "seed", "racks", "servers",
                   "workers", "n_ticks", "hot_rack_weight",
                   "straggler_rack_mult", "queue_cap", "max_arrivals",
+                  "server_model", "batch_slots", "batch_coupling", "dt_us",
                   "service", "arrival", "slowdown", "fail_window_ticks",
                   "telemetry", "engine")
 

@@ -87,7 +87,10 @@ class DecodeReplica:
     # -- NetClone server-side contract ---------------------------------------
     def submit(self, req: ServeRequest) -> bool:
         """Returns False iff the request was dropped (CLO=2 on busy queue)."""
-        if req.clo == CLO_CLONE and len(self.queue) > 0:
+        if len(req.prompt) == 0:
+            raise ValueError("ServeRequest.prompt must hold at least one "
+                             "token (prefill starts from prompt[0])")
+        if req.clo == CLO_CLONE and self.queue_len > 0:
             self.n_clone_drops += 1
             return False
         self.queue.append(req)
@@ -95,7 +98,15 @@ class DecodeReplica:
 
     @property
     def queue_len(self) -> int:
-        return len(self.queue)
+        """Requests *waiting* beyond the free slots.
+
+        Admission happens at tick boundaries, so between ticks the raw
+        ``len(queue)`` still counts requests a free slot is about to admit
+        — a request admitted and completed within the same tick window was
+        double-counted (once as the slot it occupies, once as queue depth),
+        which inflated the piggybacked STATE and made the CLO=2 rule drop
+        clones sent to an *idle* replica right after their original."""
+        return max(0, len(self.queue) - self.slots.count(None))
 
     def inject_slowdown(self, ticks: int) -> None:
         self.slowdown_ticks += ticks
@@ -150,5 +161,5 @@ class DecodeReplica:
         if done:
             self._admit(tick)       # freed slots pull from the queue first
             for c in done:
-                c.state = len(self.queue)   # post-dequeue queue length
+                c.state = self.queue_len    # post-dequeue *waiting* depth
         return done

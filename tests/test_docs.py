@@ -25,6 +25,10 @@ FLEETSIM_MODULES = [
     "repro.fleetsim",
     "repro.fleetsim.config",
     "repro.fleetsim.engine",
+    "repro.fleetsim.llmserve",
+    "repro.fleetsim.llmserve.oracle",
+    "repro.fleetsim.llmserve.service",
+    "repro.fleetsim.llmserve.stage",
     "repro.fleetsim.metrics",
     "repro.fleetsim.policies",
     "repro.fleetsim.shard",

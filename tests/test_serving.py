@@ -106,6 +106,82 @@ def test_state_piggyback_updates_dispatcher(small_model):
     assert state[0] > 0 or reps[0].queue_len == 0
 
 
+def test_queue_len_counts_waiting_not_admittable(small_model):
+    """Regression: a request the free slots will admit at the next tick
+    boundary must not be double-counted as queue depth (it is both "in the
+    queue" and "about to occupy a slot" — the waiting depth is what routing
+    and the CLO=2 drop rule act on)."""
+    cfg, params = small_model
+    rep = DecodeReplica(cfg, params, sid=0, n_slots=2, s_max=64)
+    p = np.zeros(2, np.int32)
+    rep.submit(ServeRequest(1, p, 2, clo=CLO_NONE))
+    assert rep.queue_len == 0
+    rep.submit(ServeRequest(2, p, 2, clo=CLO_NONE))
+    assert rep.queue_len == 0
+    rep.submit(ServeRequest(3, p, 2, clo=CLO_NONE))
+    assert rep.queue_len == 1
+
+
+def test_clone_accepted_at_idle_replica(small_model):
+    """Regression: an idle replica (free slots, nothing waiting) must accept
+    a clone that lands in the same tick window as another request —
+    pre-fix, the not-yet-admitted original counted as queue depth and the
+    clone was spuriously dropped exactly where cloning pays most."""
+    cfg, params = small_model
+    rep = DecodeReplica(cfg, params, sid=0, n_slots=2, s_max=64)
+    p = np.zeros(2, np.int32)
+    assert rep.submit(ServeRequest(1, p, 2, clo=CLO_NONE))
+    assert rep.submit(ServeRequest(2, p, 2, clo=CLO_CLONE))
+    assert rep.n_clone_drops == 0
+    # …and the drop rule still fires once requests genuinely wait
+    assert rep.submit(ServeRequest(3, p, 2, clo=CLO_NONE))
+    assert not rep.submit(ServeRequest(4, p, 2, clo=CLO_CLONE))
+    assert rep.n_clone_drops == 1
+
+
+def test_completion_piggyback_reports_waiting_depth(small_model):
+    """The STATE a completion carries is the post-admission waiting depth,
+    so a request admitted and completed within the same tick is not
+    reported as standing queue."""
+    cfg, params = small_model
+    rep = DecodeReplica(cfg, params, sid=0, n_slots=1, s_max=64)
+    p = np.zeros(1, np.int32)
+    rep.submit(ServeRequest(1, p, 1, clo=CLO_NONE))
+    done = []
+    for t in range(4):
+        done += rep.tick(t)
+    assert [c.req_id for c in done] == [1]
+    assert done[0].state == 0
+
+
+def test_empty_prompt_rejected(small_model):
+    cfg, params = small_model
+    rep = DecodeReplica(cfg, params, sid=0, n_slots=1, s_max=64)
+    with pytest.raises(ValueError, match="at least one token"):
+        rep.submit(ServeRequest(1, np.zeros(0, np.int32), 2, clo=CLO_NONE))
+
+
+def test_serve_example_smoke():
+    """examples/serve_netclone.py runs end-to-end as a subprocess (tiny
+    model, few ticks via the SERVE_DEMO_* knobs)."""
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    root = Path(__file__).resolve().parents[1]
+    env = {**os.environ,
+           "PYTHONPATH": str(root / "src"),
+           "SERVE_DEMO_MODEL": "qwen2.5-3b",
+           "SERVE_DEMO_REQS": "6",
+           "SERVE_DEMO_HORIZON": "20"}
+    r = subprocess.run([sys.executable, "examples/serve_netclone.py"],
+                       cwd=root, env=env, capture_output=True, text=True,
+                       timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "NetClone p95 improvement" in r.stdout
+
+
 def test_racksched_integration_routes_to_shorter_queue(small_model):
     cfg, params = small_model
     reps, srv = _mk(cfg, params, "netclone+racksched", n_replicas=2, seed=11)
