@@ -171,6 +171,13 @@ class Simulator:
         self._switch_down_from = None
         self._switch_down_until = None
         self._drop_during_downtime = 0
+        # link failure window (ChaosFuzz campaigns — the DES counterpart of
+        # repro.fleetsim.chaos): dead server ids over [from, until) µs
+        self._link_down_from = None
+        self._link_down_until = None
+        self._link_dead: frozenset[int] = frozenset()
+        self.n_link_dropped_req = 0
+        self.n_link_dropped_resp = 0
 
     # ------------------------------------------------------------------ utils
     def _push(self, heap, t, kind, payload):
@@ -187,6 +194,34 @@ class Simulator:
         return (
             self._switch_down_from is not None
             and self._switch_down_from <= t < self._switch_down_until
+        )
+
+    def schedule_link_failure(self, t_fail: float, t_recover: float,
+                              servers) -> None:
+        """ChaosFuzz link failure: the links of ``servers`` are dead in
+        ``[t_fail, t_recover)`` µs.  Request copies routed onto a dead link
+        and responses in flight from a partitioned server are dropped (and
+        counted in ``n_link_dropped_req`` / ``n_link_dropped_resp``); the
+        switch keeps serving with stale state for the dead servers, so the
+        surviving copy of a cloned pair still completes — the semantics
+        :mod:`repro.fleetsim.chaos` implements on the array engine."""
+        servers = frozenset(int(s) for s in np.asarray(servers).reshape(-1))
+        if not servers:
+            raise ValueError("schedule_link_failure needs at least one "
+                             "dead server id")
+        bad = [s for s in servers if not 0 <= s < self.n_servers]
+        if bad:
+            raise ValueError(f"link-failure server ids {sorted(bad)} out of "
+                             f"range (fabric has n_servers={self.n_servers})")
+        self._link_down_from = t_fail
+        self._link_down_until = t_recover
+        self._link_dead = servers
+
+    def _link_is_down(self, t: float, sid: int) -> bool:
+        return (
+            self._link_down_from is not None
+            and self._link_down_from <= t < self._link_down_until
+            and sid in self._link_dead
         )
 
     # ------------------------------------------------------------------- run
@@ -314,6 +349,9 @@ class Simulator:
 
             if kind == _REQ_AT_SERVER:
                 i, req = payload
+                if self._link_is_down(t, req.dst):
+                    self.n_link_dropped_req += 1
+                    continue  # copy lost on the dead link
                 srv = self.servers[req.dst]
                 if not srv.alive:
                     continue  # lost; original path still completes via pair
@@ -356,6 +394,10 @@ class Simulator:
                 i, resp = payload
                 if self._switch_is_down(t):
                     continue  # response lost with the switch
+                if self._link_is_down(t, resp.sid):
+                    self.n_link_dropped_resp += 1
+                    continue  # response lost on the dead link: no filter
+                    # fingerprint, no client delivery
                 if needs_coord:
                     self._push(heap, t + self.policy.costs.pipeline_pass + c.link,
                                _COORD_RESP, (i, resp))

@@ -1,0 +1,186 @@
+"""ChaosFuzz failure campaigns: link failures and rack partitions.
+
+The existing injection machinery darkens the *whole* fabric
+(``RunParams.fail_from_tick`` / ``fail_until_tick`` — the NetClone §3.6
+switch-wipe experiment) or slows individual servers (``slowdown``).  This
+module adds the third failure mode real fabrics exhibit: a **dead link** —
+some subset of servers (or whole racks) becomes unreachable for a window of
+ticks while the rest of the fabric keeps serving.
+
+A :class:`LinkFailure` is a ``(start_tick, duration, link_mask)`` window.
+During the window, in BOTH engines:
+
+* request copies routed onto a dead link are dropped at the link (the
+  switch does not know — its piggybacked state for the dead servers simply
+  goes stale, exactly the information real NetClone switches would have);
+* responses in flight from a partitioned server are dropped before they
+  reach any switch, so no filter-table fingerprint and no StateT refresh —
+  the surviving copy of a cloned pair completes per policy, which is the
+  RepNet-style comparison: cloning policies keep goodput through the
+  window, single-copy baselines lose every request routed onto the dead
+  link;
+* the spine masks inter-rack placement away from **fully partitioned
+  racks** (a rack whose every server is dead stops attracting remote
+  routes/clones; partially dead racks still do — the spine only sees
+  aggregated rack load).
+
+The window is *traced* (per-run inputs on :class:`RunParams`), so
+heterogeneous chaos campaigns ride in one vmapped sweep exactly like
+straggler and wipe windows.  An absent window is the inert
+``(n_ticks+1, n_ticks+1, all-False)`` triple: every mask is all-false and
+the program's results stay bit-identical to the pre-chaos engine
+(enforced by the golden tests).
+
+Drops are counted in ``Metrics.n_link_dropped_req`` /
+``n_link_dropped_resp`` and reconciled against the DES's identical
+counters by ``tests/test_chaos.py``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fleetsim.config import FleetConfig
+
+
+@dataclass(frozen=True)
+class LinkFailure:
+    """One dead-link window: ``[start_tick, start_tick + duration)`` ticks
+    during which the named ``servers`` (fabric-global ids) and every server
+    of the named ``racks`` are unreachable.
+
+    The JSON form is strict-keyed (``start_tick`` / ``duration`` /
+    ``racks`` / ``servers``), the sub-object a ``Scenario`` file carries as
+    ``"link_failure"``.
+    """
+
+    start_tick: int
+    duration: int
+    racks: tuple[int, ...] = ()
+    servers: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "racks", tuple(int(r) for r in self.racks))
+        object.__setattr__(self, "servers",
+                           tuple(int(s) for s in self.servers))
+        if self.start_tick < 0:
+            raise ValueError(f"link_failure start_tick must be >= 0, got "
+                             f"{self.start_tick}")
+        if self.duration <= 0:
+            raise ValueError(f"link_failure duration must be positive, got "
+                             f"{self.duration}")
+        if not self.racks and not self.servers:
+            raise ValueError("link_failure needs at least one dead rack or "
+                             "server (racks=[...] and/or servers=[...])")
+        if any(r < 0 for r in self.racks) or any(s < 0 for s in self.servers):
+            raise ValueError("link_failure rack/server ids must be >= 0")
+
+    @property
+    def window(self) -> tuple[int, int]:
+        return (self.start_tick, self.start_tick + self.duration)
+
+    def mask(self, n_racks: int, n_servers: int) -> np.ndarray:
+        """Dead-server mask, shape ``(n_racks * n_servers,)`` bool over
+        fabric-global server ids (rack-major, the engine's layout)."""
+        total = n_racks * n_servers
+        dead = np.zeros(total, bool)
+        for r in self.racks:
+            if r >= n_racks:
+                raise ValueError(f"link_failure rack {r} out of range "
+                                 f"(fabric has n_racks={n_racks})")
+            dead[r * n_servers:(r + 1) * n_servers] = True
+        for s in self.servers:
+            if s >= total:
+                raise ValueError(f"link_failure server {s} out of range "
+                                 f"(fabric has n_racks*n_servers={total})")
+            dead[s] = True
+        if dead.all():
+            raise ValueError(
+                "link_failure partitions every server — that is a fabric "
+                "wipe; use fail_window_ticks (switch failure) instead")
+        return dead
+
+    # ------------------------------------------------------------- JSON ----
+    def to_json(self) -> dict:
+        d: dict = {"start_tick": self.start_tick, "duration": self.duration}
+        if self.racks:
+            d["racks"] = list(self.racks)
+        if self.servers:
+            d["servers"] = list(self.servers)
+        return d
+
+    _JSON_KEYS = ("start_tick", "duration", "racks", "servers")
+
+    @classmethod
+    def from_json(cls, d: dict) -> "LinkFailure":
+        unknown = sorted(set(d) - set(cls._JSON_KEYS))
+        if unknown:
+            # files are the API: a misspelled knob must not silently run a
+            # failure-free campaign
+            raise ValueError(f"unknown link_failure keys {unknown}; "
+                             f"valid: {sorted(cls._JSON_KEYS)}")
+        if "start_tick" not in d or "duration" not in d:
+            raise ValueError("link_failure needs start_tick and duration")
+        return cls(start_tick=int(d["start_tick"]),
+                   duration=int(d["duration"]),
+                   racks=tuple(d.get("racks", ())),
+                   servers=tuple(d.get("servers", ())))
+
+
+def check_link_failure(cfg: FleetConfig, link_failure: LinkFailure | None
+                       ) -> tuple[int, int, np.ndarray]:
+    """Resolve a window to the traced ``(from_tick, until_tick, mask)``
+    triple (shared by :func:`repro.fleetsim.engine.make_params` and
+    ``sweep.sweep_grid``).  ``None`` yields the inert triple — window past
+    the horizon, all-false mask — whose program results are bit-identical
+    to a run without the feature."""
+    if link_failure is None:
+        return (cfg.n_ticks + 1, cfg.n_ticks + 1,
+                np.zeros(cfg.n_servers_total, bool))
+    f0, f1 = link_failure.window
+    return f0, f1, link_failure.mask(cfg.n_racks, cfg.n_servers)
+
+
+def link_dead(params, tick: jax.Array) -> jax.Array:
+    """Per-server dead mask at ``tick``, ``(n_racks * n_servers,)`` bool —
+    all-false outside the window."""
+    in_window = ((tick >= params.link_from_tick)
+                 & (tick < params.link_until_tick))
+    return params.link_mask & in_window
+
+
+# ------------------------------------------------------------- tick stages --
+def stage_link_failure(cfg: FleetConfig, params, state, arr, lanes):
+    """Drop request copies dispatched onto a dead link (between routing and
+    the servers).  The switch keeps whatever stale view it had — exactly
+    the §3.6 information model, where only responses refresh StateT."""
+    dead = link_dead(params, arr.tick)
+    hit = lanes.act & dead[lanes.dst]
+    m = state.metrics
+    m = m._replace(n_link_dropped_req=m.n_link_dropped_req + hit.sum())
+    return (state._replace(metrics=m),
+            lanes._replace(act=lanes.act & ~hit))
+
+
+def stage_link_response(cfg: FleetConfig, params, state, arr, resp):
+    """Drop responses in flight from partitioned servers before they reach
+    any switch: no filter-table fingerprint, no StateT refresh, no client
+    delivery — the surviving clone (if the policy made one) completes."""
+    dead = link_dead(params, arr.tick)
+    hit = resp.active & dead[resp.sid]
+    m = state.metrics
+    m = m._replace(n_link_dropped_resp=m.n_link_dropped_resp + hit.sum())
+    return (state._replace(metrics=m),
+            resp._replace(active=resp.active & ~hit))
+
+
+def rack_dead_mask(dead: jax.Array, n_racks: int, n_servers: int
+                   ) -> jax.Array:
+    """Racks whose *every* server link is dead, ``(n_racks,)`` bool — the
+    spine's partition view (it aggregates per-rack load, so partially dead
+    racks are indistinguishable from slow ones)."""
+    return dead.reshape(n_racks, n_servers).all(axis=1)

@@ -75,6 +75,15 @@ class RunParams(NamedTuple):
     # default is a plain int so importing this module does not create a
     # device array; every construction path fills it explicitly.)
     hedge_delay_ticks: jax.Array | int = 0
+    # ChaosFuzz link-failure window (repro.fleetsim.chaos): dead links from
+    # link_from_tick until link_until_tick over the (n_racks·S,) bool
+    # link_mask.  Traced per-run inputs like fail_*_tick, so heterogeneous
+    # failure campaigns ride in one vmapped sweep; the inert default —
+    # window past the horizon, all-false mask — keeps results bit-identical.
+    # (Plain ints for the same import-time reason as hedge_delay_ticks.)
+    link_from_tick: jax.Array | int = 0
+    link_until_tick: jax.Array | int = 0
+    link_mask: jax.Array | int = 0
 
 
 def check_fabric_arrays(cfg: FleetConfig, slowdown=None, rack_weights=None,
@@ -160,13 +169,17 @@ def make_params(cfg: FleetConfig, policy_id: int, rate_per_us: float,
                 seed: int, slowdown=None, rack_weights=None,
                 fail_window: tuple[int, int] | None = None,
                 arrival_counts=None,
-                hedge_delay_us: float | None = None) -> RunParams:
+                hedge_delay_us: float | None = None,
+                link_failure=None) -> RunParams:
+    from repro.fleetsim.chaos import check_link_failure
+
     slowdown, rack_weights = check_fabric_arrays(cfg, slowdown, rack_weights)
     arrival_counts = check_arrival_counts(cfg, arrival_counts)
     check_policy_stages(cfg, policy_id)
     delay_ticks = check_hedge_delay(cfg, hedge_delay_us)
     f0, f1 = fail_window if fail_window is not None \
         else (cfg.n_ticks + 1, cfg.n_ticks + 1)
+    l0, l1, link_mask = check_link_failure(cfg, link_failure)
     return RunParams(policy_id=jnp.int32(policy_id),
                      rate_per_us=jnp.float32(rate_per_us),
                      seed=jnp.int32(seed),
@@ -175,7 +188,10 @@ def make_params(cfg: FleetConfig, policy_id: int, rate_per_us: float,
                      fail_from_tick=jnp.int32(f0),
                      fail_until_tick=jnp.int32(f1),
                      arrival_counts=jnp.asarray(arrival_counts, jnp.int32),
-                     hedge_delay_ticks=jnp.int32(delay_ticks))
+                     hedge_delay_ticks=jnp.int32(delay_ticks),
+                     link_from_tick=jnp.int32(l0),
+                     link_until_tick=jnp.int32(l1),
+                     link_mask=jnp.asarray(link_mask, bool))
 
 
 # ------------------------------------------------------------------ runner --

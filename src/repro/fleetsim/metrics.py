@@ -59,6 +59,10 @@ class FleetResult:
     # mean busy fraction of the decode slots (ServeSim batch server);
     # 0.0 when server_model == "fcfs" compiled the batch stage out
     mean_slot_occupancy: float = 0.0
+    # ChaosFuzz link-failure drops (repro.fleetsim.chaos); zero unless the
+    # run carried a link_failure window
+    n_link_dropped_req: int = 0
+    n_link_dropped_resp: int = 0
     rack_completed: tuple[int, ...] = ()       # in-window, by serving rack
     rack_p50_us: tuple[float, ...] = ()
     rack_p99_us: tuple[float, ...] = ()
@@ -89,6 +93,8 @@ class FleetResult:
             "hedges_armed": self.n_hedges_armed,
             "hedge_delay_us": round(self.hedge_delay_us, 2),
             "slot_occupancy": round(self.mean_slot_occupancy, 3),
+            "link_dropped_req": self.n_link_dropped_req,
+            "link_dropped_resp": self.n_link_dropped_resp,
             "empty_q": round(self.empty_queue_fraction, 3),
             "rack_completed": list(self.rack_completed),
             "rack_p50_us": [round(v, 1) for v in self.rack_p50_us],
@@ -169,6 +175,8 @@ def summarize(cfg: FleetConfig, metrics, *, policy: str, load: float,
         n_wheel_dropped=int(metrics.n_wheel_dropped),
         hedge_delay_us=float(hedge_delay_us),
         mean_slot_occupancy=occupancy,
+        n_link_dropped_req=int(metrics.n_link_dropped_req),
+        n_link_dropped_resp=int(metrics.n_link_dropped_resp),
         rack_completed=tuple(int(r.sum()) for r in rack_hist),
         rack_p50_us=tuple(hist_percentile(r, mids, 50.0) for r in rack_hist),
         rack_p99_us=tuple(hist_percentile(r, mids, 99.0) for r in rack_hist),

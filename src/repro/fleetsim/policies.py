@@ -187,7 +187,7 @@ def route(policy_id: jax.Array, server_state: jax.Array, pair: jax.Array,
 def route_fabric(policy_id: jax.Array, server_state: jax.Array,
                  pair: jax.Array, r1: jax.Array, r2: jax.Array,
                  home_rack: jax.Array, remote_cand: jax.Array, *,
-                 n_racks: int, n_servers: int):
+                 n_racks: int, n_servers: int, dead: jax.Array | None = None):
     """Fabric routing: per-rack switch decision + spine inter-rack placement.
 
     All server ids are fabric-global (``rack * n_servers + local``);
@@ -204,6 +204,12 @@ def route_fabric(policy_id: jax.Array, server_state: jax.Array,
     the remote member before placing the CLO=2 copy on it.  Such pairs are
     later filtered at the spine, the only switch both responses cross.
 
+    ``dead`` (optional ``(n_racks*n_servers,)`` bool; ChaosFuzz link
+    failures, :mod:`repro.fleetsim.chaos`) marks partitioned links: the
+    spine steers placement away from *fully* dead racks and never forms a
+    cross-rack pair onto a dead remote member.  An all-false (or absent)
+    mask leaves every value bit-identical.
+
     Returns ``(dst1, dst2, cloned, clo1, clo2)``; the caller derives the
     inter-rack mask as ``cloned & (dst1 // n_servers != dst2 // n_servers)``.
     """
@@ -215,13 +221,24 @@ def route_fabric(policy_id: jax.Array, server_state: jax.Array,
     per_rack = server_state.reshape(n_racks, n_servers)
     rack_load = per_rack.sum(axis=1)              # spine's aggregated view
     rack_min = per_rack.min(axis=1)
+    dead_ok = jnp.ones_like(dst1, dtype=bool)
+    if dead is not None:
+        # a fully partitioned rack stops attracting spine placement (its
+        # aggregated load reads as saturated); the spine also refuses the
+        # cross-rack copy when the chosen remote member's own link is dead
+        big = jnp.int32(1 << 24)
+        rack_load = rack_load + jnp.where(
+            dead.reshape(n_racks, n_servers).all(axis=1), big, 0)
     remote = jax.lax.switch(
         policy_id, _spine_branches(n_racks, n_servers),
         rack_load, server_state, home_rack, r1, r2, remote_cand)
+    if dead is not None:
+        dead_ok = ~dead[remote]
     wants_clone = id_mask(policy_id, registry.spine_clone_ids())
     xclone = (wants_clone & ~cloned
               & (rack_min[home_rack] > 0)        # home rack saturated
-              & (server_state[remote] == 0))     # remote member tracked-idle
+              & (server_state[remote] == 0)      # remote member tracked-idle
+              & dead_ok)
     dst2 = jnp.where(xclone, remote, dst2)
     clo1 = jnp.where(xclone, CLO_ORIG, clo1).astype(jnp.int32)
     clo2 = jnp.where(xclone, CLO_CLONE, clo2).astype(jnp.int32)

@@ -73,6 +73,11 @@ from repro.fleetsim.config import (
     SERVICE_PARETO,
     FleetConfig,
 )
+from repro.fleetsim.chaos import (
+    link_dead,
+    stage_link_failure,
+    stage_link_response,
+)
 from repro.fleetsim.policies import dedup_tick, id_mask, route_fabric
 from repro.fleetsim.state import (
     QF,
@@ -343,7 +348,8 @@ def stage_route(cfg: FleetConfig, params, state: FleetState, arr: Arrivals,
     pair = group_pairs[arr.grp] + (arr.home * S)[:, None]
     dst1, dst2, cloned, clo1, clo2 = route_fabric(
         params.policy_id, arr.sstate, pair, arr.r1, arr.r2, arr.home,
-        arr.r2_local, n_racks=RK, n_servers=S)
+        arr.r2_local, n_racks=RK, n_servers=S,
+        dead=link_dead(params, arr.tick))
     xrack = cloned & ((dst1 // S) != (dst2 // S))
     # the filter switch of a pair: its home rack ToR, or the spine
     # (table group RK) when the copies span racks
@@ -965,7 +971,13 @@ def build_step(cfg: FleetConfig, params, group_pairs: jax.Array):
                                          lanes)
         state, lanes = stage_hedge_timer(cfg, params, state, arr, routed,
                                          lanes)
+        # ChaosFuzz link failures (repro.fleetsim.chaos): copies onto a
+        # dead link vanish before the servers, responses from partitioned
+        # servers vanish before the filter switch.  Inert windows keep
+        # both stages value-identical to the pre-chaos pipeline.
+        state, lanes = stage_link_failure(cfg, params, state, arr, lanes)
         state, resp = stage_server(cfg, params, state, arr, lanes)
+        state, resp = stage_link_response(cfg, params, state, arr, resp)
         state, drop = stage_response_filter(cfg, params, state, arr, resp)
         state = stage_client(cfg, params, state, arr, resp, drop, const_lat)
         if cfg.telemetry:

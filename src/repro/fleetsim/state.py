@@ -175,6 +175,11 @@ class Metrics(NamedTuple):
     # decode slots summed over servers × ticks; only the batch server
     # stage ever moves it off zero
     n_slot_busy: jax.Array
+    # ChaosFuzz link-failure campaign counters (repro.fleetsim.chaos):
+    # copies lost on a dead link, request- and response-side.  Inert runs
+    # (no link_failure window) keep both pinned at zero bit-identically.
+    n_link_dropped_req: jax.Array
+    n_link_dropped_resp: jax.Array
 
 
 class FleetState(NamedTuple):
@@ -220,7 +225,8 @@ def init_metrics(cfg: FleetConfig) -> Metrics:
                    lost_down_resp=z,
                    n_coord_queued=z, n_coord_overflow=z,
                    n_hedges_armed=z, n_hedges_cancelled=z, n_wheel_dropped=z,
-                   n_slot_busy=z)
+                   n_slot_busy=z,
+                   n_link_dropped_req=z, n_link_dropped_resp=z)
 
 
 def init_coord_state(cfg: FleetConfig) -> CoordState:

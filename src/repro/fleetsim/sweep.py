@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.workloads import ServiceProcess, load_to_rate
 from repro.fleetsim.config import POLICY_IDS, FleetConfig, ServiceSpec
+from repro.fleetsim.chaos import check_link_failure
 from repro.fleetsim.engine import (
     RunParams,
     check_fabric_arrays,
@@ -138,6 +139,7 @@ def sweep_grid(
     slowdown: np.ndarray | None = None,
     rack_weights: np.ndarray | None = None,
     fail_window_ticks: tuple[int, int] | None = None,
+    link_failure=None,
     resize_arrival_lanes: bool = True,
     hedge_delays: list[float] | None = None,
     shard: ShardSpec | int | None = None,
@@ -152,7 +154,9 @@ def sweep_grid(
     (shape ``(n_racks,)``) skews the arrival mix toward hot racks (see
     :func:`rack_skew` for the canonical one-hot-rack / one-straggler-rack
     scenario); ``fail_window_ticks`` darkens the fabric over ``[t0, t1)``
-    ticks and wipes its soft state at recovery, for all runs.
+    ticks and wipes its soft state at recovery, for all runs;
+    ``link_failure`` (a :class:`repro.fleetsim.chaos.LinkFailure`) kills
+    the named server/rack links over its window, for all runs.
     ``resize_arrival_lanes=False`` keeps ``cfg.max_arrivals`` exactly as
     given (pinned array shapes — e.g. golden scenarios) instead of applying
     Poisson headroom for the hottest load.
@@ -219,6 +223,7 @@ def sweep_grid(
     g = len(grid)
     f0, f1 = fail_window_ticks if fail_window_ticks is not None \
         else (cfg.n_ticks + 1, cfg.n_ticks + 1)
+    l0, l1, link_mask = check_link_failure(cfg, link_failure)
     params = RunParams(
         policy_id=np.asarray([POLICY_IDS[p] for p, *_ in grid], np.int32),
         rate_per_us=np.asarray([rates[ld] for _, ld, _, _ in grid],
@@ -232,6 +237,10 @@ def sweep_grid(
         arrival_counts=np.zeros((g, 0), np.int32),
         hedge_delay_ticks=np.asarray(
             [check_hedge_delay(cfg, hd) for *_, hd in grid], np.int32),
+        link_from_tick=np.full(g, l0, np.int32),
+        link_until_tick=np.full(g, l1, np.int32),
+        link_mask=np.broadcast_to(link_mask,
+                                  (g, cfg.n_servers_total)).copy(),
     )
     params = jax.tree.map(lambda a: jax.numpy.asarray(a), params)
 

@@ -471,6 +471,15 @@ def main(argv: list[str] | None = None) -> int:
                          "vs DecodeReplica oracle over this many ticks "
                          "(0 skips; each tick is a real jitted decode "
                          "step, so ~1500 is a thorough run)")
+    ap.add_argument("--fuzz", type=int, default=0,
+                    help="also run the ChaosFuzz tier: this many generated "
+                         "scenarios through the fuzz contract "
+                         "(repro.scenarios.fuzz; 0 skips)")
+    ap.add_argument("--fuzz-seed", default="0",
+                    help="fuzz rng seed (integer, or 'from-date' for "
+                         "today's UTC date as YYYYMMDD)")
+    ap.add_argument("--fuzz-out", default="results/fuzz",
+                    help="directory for shrunk fuzz counterexample JSON")
     ap.add_argument("--out", default=None,
                     help="write the cross-validation report (one row per "
                          "checked point) to this JSON artifact")
@@ -479,6 +488,7 @@ def main(argv: list[str] | None = None) -> int:
     checks = []
     shard_checks, shard_hist_ok = [], True
     serve_checks = []
+    fuzz_report = None
     if args.grid != "none":
         spec = SweepSpec.from_file(args.grid)
         print(f"== grid {args.grid}: {spec.resolved_policies()} x "
@@ -498,6 +508,15 @@ def main(argv: list[str] | None = None) -> int:
         print(f"== serve equivalence: batch stage vs DecodeReplica, "
               f"{args.serve_ticks} ticks ==")
         serve_checks = serve_equivalence(horizon=args.serve_ticks)
+    if args.fuzz:
+        from repro.scenarios.fuzz import _resolve_seed, fuzz_contract
+
+        fuzz_seed = _resolve_seed(args.fuzz_seed)
+        print(f"== fuzz tier: {args.fuzz} generated scenarios, "
+              f"seed {fuzz_seed} ==")
+        fuzz_report = fuzz_contract(fuzz_seed, args.fuzz,
+                                    out_dir=args.fuzz_out)
+        print(fuzz_report.describe())
     n_ok = 0
     for c in checks:
         n_ok += c.ok
@@ -542,12 +561,21 @@ def main(argv: list[str] | None = None) -> int:
                               "saturated": bool(c.saturated),
                               "detail": c.describe()}
                              for c in serve_checks],
+            "fuzz": None if fuzz_report is None else {
+                "seed": fuzz_report.seed, "n_cases": fuzz_report.n_cases,
+                "n_des_checked": fuzz_report.n_des_checked,
+                "pass": bool(fuzz_report.ok),
+                "failures": [{"case": f.case_index, "fails": f.fails,
+                              "counterexample": str(f.counterexample)}
+                             for f in fuzz_report.failures],
+            },
         }, indent=1))
         print(f"wrote {out}")
     shard_all_ok = shard_hist_ok and n_shard_ok == len(shard_checks)
     serve_all_ok = n_serve_ok == len(serve_checks)
+    fuzz_ok = fuzz_report is None or fuzz_report.ok
     return 0 if (n_ok == len(checks) and shard_all_ok
-                 and serve_all_ok) else 1
+                 and serve_all_ok and fuzz_ok) else 1
 
 
 if __name__ == "__main__":

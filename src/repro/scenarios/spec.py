@@ -30,6 +30,7 @@ import jax
 import numpy as np
 
 from repro.core.workloads import load_to_rate, rate_to_load
+from repro.fleetsim.chaos import LinkFailure
 from repro.fleetsim.config import FleetConfig
 from repro.fleetsim.engine import make_params, simulate
 from repro.fleetsim.metrics import FleetResult, summarize
@@ -75,6 +76,9 @@ class Scenario:
     straggler_rack_mult: float = 1.0
     slowdown: tuple[float, ...] | None = None
     fail_window_ticks: tuple[int, int] | None = None
+    # ChaosFuzz failure campaign (repro.fleetsim.chaos): dead links for the
+    # named servers/racks over a tick window, in BOTH engines
+    link_failure: LinkFailure | None = None
     queue_cap: int | None = None
     max_arrivals: int | None = None
     # ServeSim (repro.fleetsim.llmserve): "batch" swaps the FCFS worker
@@ -95,6 +99,28 @@ class Scenario:
     # default ('auto' backend — staged, or fused where native); pinned
     # options ride the JSON so a file reproduces its exact execution path
     engine: EngineOptions | None = None
+
+    def __post_init__(self):
+        # injection windows are validated at spec load: a window hanging
+        # past the horizon would otherwise silently truncate (the engines
+        # only ever compare tick against the window edges)
+        if self.fail_window_ticks is not None:
+            f0, f1 = self.fail_window_ticks
+            if not 0 <= f0 < f1 <= self.n_ticks:
+                raise ValueError(
+                    f"fail_window_ticks [{f0}, {f1}) must satisfy 0 <= "
+                    f"start < end <= n_ticks={self.n_ticks}; shrink the "
+                    "window or raise n_ticks")
+        if self.link_failure is not None:
+            l0, l1 = self.link_failure.window
+            if l1 > self.n_ticks:
+                raise ValueError(
+                    f"link_failure window [{l0}, {l1}) exceeds "
+                    f"n_ticks={self.n_ticks}; shrink start_tick/duration "
+                    "or raise n_ticks")
+            # fail fast on out-of-range rack/server ids too (one line, at
+            # load time — not a gather error from inside a trace)
+            self.link_failure.mask(self.racks, self.servers)
 
     # ------------------------------------------------------------ derived --
     @property
@@ -170,7 +196,8 @@ class Scenario:
             cfg, d.policy_id, self.rate_per_us(cfg.n_ticks), self.seed,
             slowdown=slowdown, rack_weights=weights,
             fail_window=self.fail_window_ticks,
-            arrival_counts=self.arrival.tick_counts(cfg.n_ticks))
+            arrival_counts=self.arrival.tick_counts(cfg.n_ticks),
+            link_failure=self.link_failure)
 
     def fleet_metrics(self, **cfg_overrides):
         """Run the array engine; returns ``(cfg, raw device Metrics)``."""
@@ -230,10 +257,14 @@ class Scenario:
         sim = Simulator(self.policy, svc, n_servers=self.servers,
                         n_workers=self.workers, seed=self.seed)
         nt = n_ticks or self.n_ticks
+        dt = self.arrival.dt_us if self.arrival.kind == "trace" else 1.0
         if self.fail_window_ticks is not None:
-            dt = self.arrival.dt_us if self.arrival.kind == "trace" else 1.0
             f0, f1 = self.fail_window_ticks
             sim.schedule_switch_failure(f0 * dt, f1 * dt)
+        if self.link_failure is not None:
+            l0, l1 = self.link_failure.window
+            dead = np.nonzero(self.link_failure.mask(1, self.servers))[0]
+            sim.schedule_link_failure(l0 * dt, l1 * dt, dead)
         if self.arrival.kind == "trace":
             return sim.run(arrival=self.arrival, n_ticks=nt, **run_kw)
         if n_requests is None:
@@ -258,6 +289,8 @@ class Scenario:
             d["slowdown"] = list(self.slowdown)
         if self.fail_window_ticks is not None:
             d["fail_window_ticks"] = list(self.fail_window_ticks)
+        if self.link_failure is not None:
+            d["link_failure"] = self.link_failure.to_json()
         if self.queue_cap is not None:
             d["queue_cap"] = self.queue_cap
         if self.max_arrivals is not None:
@@ -281,7 +314,7 @@ class Scenario:
                   "straggler_rack_mult", "queue_cap", "max_arrivals",
                   "server_model", "batch_slots", "batch_coupling", "dt_us",
                   "service", "arrival", "slowdown", "fail_window_ticks",
-                  "telemetry", "engine")
+                  "link_failure", "telemetry", "engine")
 
     @classmethod
     def from_json(cls, d: dict) -> "Scenario":
@@ -293,8 +326,8 @@ class Scenario:
                              f"valid: {sorted(cls._JSON_KEYS)}")
         kw = {k: d[k] for k in cls._JSON_KEYS
               if k in d and k not in ("service", "arrival", "slowdown",
-                                      "fail_window_ticks", "telemetry",
-                                      "engine")}
+                                      "fail_window_ticks", "link_failure",
+                                      "telemetry", "engine")}
         if "service" in d:
             kw["service"] = ServiceSpec.from_json(d["service"])
         kw["arrival"] = arrival_from_json(d.get("arrival"))
@@ -302,6 +335,8 @@ class Scenario:
             kw["slowdown"] = tuple(float(v) for v in d["slowdown"])
         if d.get("fail_window_ticks") is not None:
             kw["fail_window_ticks"] = tuple(d["fail_window_ticks"])
+        if d.get("link_failure") is not None:
+            kw["link_failure"] = LinkFailure.from_json(d["link_failure"])
         if d.get("telemetry") is not None:
             kw["telemetry"] = TelemetrySpec.from_json(d["telemetry"])
         if d.get("engine") is not None:
@@ -383,6 +418,7 @@ class SweepSpec:
                               cfg=cfg, slowdown=slowdown,
                               rack_weights=weights,
                               fail_window_ticks=base.fail_window_ticks,
+                              link_failure=base.link_failure,
                               resize_arrival_lanes=not pinned,
                               hedge_delays=list(self.hedge_delays) or None,
                               shard=self.shard, engine=self.engine)

@@ -305,12 +305,43 @@ def test_library_names_resolve():
 
     lib = scenario_library()
     assert {"golden_single_tor", "validate_grid", "trace_burst",
-            "multirack_hot", "hedge_vs_netclone"} <= set(lib)
+            "multirack_hot", "hedge_vs_netclone",
+            "chaos_partition"} <= set(lib)
     assert isinstance(load_any("validate_grid"), SweepSpec)
     assert isinstance(load_any("hedge_vs_netclone"), SweepSpec)
     assert isinstance(load_any("trace_burst"), Scenario)
+    assert isinstance(load_any("chaos_partition"), Scenario)
     with pytest.raises(FileNotFoundError):
         load_any("no_such_scenario")
+
+
+@pytest.mark.parametrize("name", sorted(
+    p.stem for p in
+    (Path(__file__).parent.parent / "src/repro/scenarios/library"
+     ).glob("*.json")))
+def test_every_bundled_file_round_trips(name):
+    """Every bundled library JSON loads, re-serialises, and re-loads to an
+    equal object — Scenario and SweepSpec alike."""
+    from repro.scenarios import load_any
+
+    obj = load_any(name)
+    assert type(obj).from_json(json.loads(json.dumps(obj.to_json()))) == obj
+
+
+@pytest.mark.parametrize("name", sorted(
+    p.stem for p in
+    (Path(__file__).parent.parent / "src/repro/scenarios/library"
+     ).glob("*.json")))
+def test_every_bundled_file_runs_through_cli(name, tmp_path):
+    """`python -m repro.scenarios run <name> --engine fleetsim` smoke over
+    the whole bundled library (short horizon)."""
+    from repro.scenarios.__main__ import main
+
+    art = tmp_path / f"{name}.json"
+    assert main([name, "--engine", "fleetsim", "--ticks", "500",
+                 "--out", str(art)]) == 0
+    rows = json.loads(art.read_text())["rows"]
+    assert rows and all(r["engine"] == "fleetsim" for r in rows)
 
 
 # ------------------------------------------------------------ trace replay --
